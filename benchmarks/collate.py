@@ -1,0 +1,152 @@
+"""Collate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.collate [--dir benchmarks/out/dryrun]
+
+Prints markdown; `--write` patches EXPERIMENTS.md between the AUTO markers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}"
+
+
+def load(d):
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json") and "__" in fn:
+            with open(os.path.join(d, fn)) as f:
+                rows.append((fn, json.load(f)))
+    return rows
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | kind | opt | lower s | compile s | args GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for fn, r in rows:
+        mesh = "2pod(2x16x16)" if r["chips"] == 512 else "1pod(16x16)"
+        mem = (r.get("memory") or {}).get("argument_bytes")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['kind']} | "
+            f"{r.get('optimizer', '-')} | {r.get('lower_s', '-')} | "
+            f"{r.get('compile_s', '-')} | {_fmt_bytes(mem)} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | mesh | flops/dev | compute ms | memory ms | "
+           "collective ms | dominant | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for fn, r in rows:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        mesh = "2pod" if r["chips"] == 512 else "1pod"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {rl['flops']:.2e} | "
+            f"{1e3 * rl['compute_s']:.2f} | {1e3 * rl['memory_s']:.2f} | "
+            f"{1e3 * rl['collective_s']:.2f} | {rl['dominant']} | "
+            f"{rl['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def variants_table(rows):
+    """Tagged variant JSONs vs their baselines (the §Perf evidence)."""
+    base = {}
+    tagged = []
+    for fn, r in rows:
+        parts = fn[:-5].split("__")
+        key = tuple(parts[:3])
+        if len(parts) == 3:
+            base[key] = r
+        else:
+            tagged.append((key, parts[3], r))
+    out = ["| cell | variant | flops/dev | mem ms (Δ) | coll ms (Δ) | dominant |",
+           "|---|---|---|---|---|---|"]
+    for key, tag, r in sorted(tagged):
+        rl = r.get("roofline")
+        b = base.get(key, {}).get("roofline")
+        if not rl:
+            continue
+
+        def delta(field):
+            cur = 1e3 * rl[field]
+            if not b or not b.get(field):
+                return f"{cur:.1f}"
+            d = 100.0 * (cur - 1e3 * b[field]) / max(1e3 * b[field], 1e-9)
+            return f"{cur:.1f} ({d:+.0f}%)"
+
+        out.append(f"| {key[0]}/{key[1]}/{key[2]} | {tag} | {rl['flops']:.2e} | "
+                   f"{delta('memory_s')} | {delta('collective_s')} | "
+                   f"{rl['dominant']} |")
+    return "\n".join(out)
+
+
+def paper_tables(results_path):
+    if not os.path.exists(results_path):
+        return "(run `python -m benchmarks.run` first)"
+    with open(results_path) as f:
+        res = json.load(f)
+    out = []
+    if "table3" in res:
+        out.append("#### Table 3 analogue — accumulative pair counts (exact)\n")
+        for ds, row in res["table3"].items():
+            out.append(f"- **{ds}**: " + ", ".join(
+                f"s≥{s}: {float(v):.0f}" for s, v in sorted(row.items())))
+    for name, title in [("fig4_6", "Figs 4–6 — offline error (mean±std)"),
+                        ("fig8", "Fig 8 — online error at equal space"),
+                        ("fig9a", "Fig 9a — error vs sampling ratio"),
+                        ("fig9b", "Fig 9b — error vs dimensionality"),
+                        ("fig9c", "Fig 9c — error vs dataset size"),
+                        ("fig10", "Fig 10 — running time scaling")]:
+        if name not in res:
+            continue
+        out.append(f"\n#### {title}\n")
+        for k, v in res[name].items():
+            out.append(f"- {k}: " + json.dumps(v))
+    return "\n".join(out)
+
+
+def _splice(text, start, end, md):
+    if start in text:
+        pre, rest = text.split(start, 1)
+        _, post = rest.split(end, 1)
+        return pre + start + "\n" + md + "\n" + end + post
+    return text + f"\n{start}\n{md}\n{end}\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(HERE, "out", "dryrun"))
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    base = [r for r in rows if len(r[0][:-5].split("__")) == 3]
+    md = ("### Dry-run cells (auto-generated)\n\n" + dryrun_table(base)
+          + "\n\n### Roofline terms (auto-generated)\n\n" + roofline_table(base))
+    vmd = "### Variant measurements (auto-generated)\n\n" + variants_table(rows)
+    pmd = paper_tables(os.path.join(HERE, "out", "results.json"))
+    print(md + "\n\n" + vmd + "\n\n" + pmd)
+    if args.write:
+        path = os.path.join(os.path.dirname(HERE), "EXPERIMENTS.md")
+        text = open(path).read()
+        text = _splice(text, "<!-- AUTO-DRYRUN-START -->",
+                       "<!-- AUTO-DRYRUN-END -->", md)
+        text = _splice(text, "<!-- AUTO-VARIANTS-START -->",
+                       "<!-- AUTO-VARIANTS-END -->", vmd)
+        text = _splice(text, "<!-- AUTO-PAPER-START -->",
+                       "<!-- AUTO-PAPER-END -->", pmd)
+        open(path, "w").write(text)
+        print(f"\n[written to {path}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Benchmark runner: `PYTHONPATH=src python -m benchmarks.run [names...]`.
+
+Default (no args) runs the paper benchmarks + the kernel micro-bench and
+collates any dry-run roofline JSONs under benchmarks/out/dryrun into the
+roofline summary table.  Individual benchmarks: table3 fig4_6 fig8 fig9a
+fig9b fig9c fig10 kernels roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+OUT_DIR = os.path.join(HERE, "out")
+
+
+def bench_kernels():
+    """Pallas kernel (interpret mode) vs jnp reference: correctness + the
+    structural numbers the kernel claims (VMEM tile residency)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sketch as sk
+    from repro.core.hashing import P31
+    from repro.kernels.ops import sketch_update, sketch_moments
+
+    rng = np.random.default_rng(0)
+    out = {}
+    for n, t, w in [(4096, 3, 1024), (16384, 3, 4096)]:
+        params = sk.make_sketch_params(rng, t)
+        k1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        k2 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        weights = jnp.ones((n,), jnp.int32)
+        empty = sk.empty_counters(t, w)
+        t0 = time.time()
+        ref = sketch_update(empty, k1, k2, params, weights, use_pallas=False)
+        ref.block_until_ready()
+        t_ref = time.time() - t0
+        t0 = time.time()
+        pal = sketch_update(empty, k1, k2, params, weights, use_pallas=True,
+                            interpret=True)
+        pal.block_until_ready()
+        t_pal = time.time() - t0
+        match = bool(jnp.array_equal(ref, pal))
+        out[f"n{n}_t{t}_w{w}"] = {"match": match, "ref_s": t_ref,
+                                  "pallas_interp_s": t_pal}
+        print(f"sketch_update n={n} t={t} w={w}: match={match} "
+              f"(ref {t_ref:.2f}s, pallas-interpret {t_pal:.2f}s)")
+        assert match
+    return out
+
+
+def bench_roofline():
+    """Collate dry-run JSONs into the roofline summary table."""
+    d = os.path.join(OUT_DIR, "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        print("no dry-run artifacts under benchmarks/out/dryrun -- run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --arch all --out "
+              "benchmarks/out/dryrun first")
+        return {}
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(d, fn)) as f:
+            rep = json.load(f)
+        r = rep.get("roofline", {})
+        rows.append({
+            "cell": f"{rep['arch']}/{rep['shape']}/{'2pod' if rep['chips'] == 512 else '1pod'}",
+            "dominant": r.get("dominant"),
+            "compute_ms": round(1e3 * r.get("compute_s", 0), 2),
+            "memory_ms": round(1e3 * r.get("memory_s", 0), 2),
+            "collective_ms": round(1e3 * r.get("collective_s", 0), 2),
+            "useful_ratio": round(r.get("useful_ratio", 0), 3),
+        })
+    hdr = (f"{'cell':50s} {'dom':10s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['cell']:50s} {str(r['dominant']):10s} "
+              f"{r['compute_ms']:9.2f} {r['memory_ms']:9.2f} "
+              f"{r['collective_ms']:9.2f} {r['useful_ratio']:7.3f}")
+    return rows
+
+
+def main(argv):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    from benchmarks import paper_benchmarks as PB
+    names = argv or (list(PB.ALL) + ["kernels", "roofline"])
+    results = {}
+    for name in names:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        if name == "kernels":
+            results[name] = bench_kernels()
+        elif name == "roofline":
+            results[name] = bench_roofline()
+        else:
+            results[name] = PB.ALL[name]()
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+    with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\nresults -> {os.path.join(OUT_DIR, 'results.json')}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

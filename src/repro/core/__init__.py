@@ -1,0 +1,22 @@
+"""repro.core -- the paper's contribution: one-pass similarity (self-)join
+size estimation over d-column record streams (SJPC, Rafiei & Deng 2018)."""
+
+from .sjpc import (            # noqa: F401
+    SJPCConfig, SJPCParams, SJPCState, SJPCEstimate,
+    init, update, merge, all_reduce, estimate, estimate_join,
+    f2_to_pair_count, inner_to_join_count, level_f2,
+    offline_variance_bound, online_variance_bound,
+)
+from .sketch import (          # noqa: F401
+    SketchParams, make_sketch_params, empty_counters, sketch_update,
+    estimate_f2, estimate_inner,
+)
+from .exact import (           # noqa: F401
+    exact_pair_counts, exact_level_join_sizes, brute_force_pair_counts,
+    exact_g, brute_force_join_counts, exact_join_g,
+)
+from .baselines import (       # noqa: F401
+    random_sampling_g, random_sampling_pair_counts, lsh_ss_g,
+    sample_size_for_bytes,
+)
+from .projections import lattice, level_combinations, comb  # noqa: F401

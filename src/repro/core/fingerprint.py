@@ -1,0 +1,75 @@
+"""Rabin-style polynomial fingerprints of projected sub-values.
+
+A level-k "sub-value" of a record is (combination-id, v_{c1}, ..., v_{ck}) --
+the paper encodes it as the string ``ABC.a1.b1.c3``.  We encode it as a
+polynomial fingerprint over GF(2^31-1):
+
+    fp(base) = Horner(base, [combo_id + 1, v_{c1} + 1, ..., v_{ck} + 1])
+
+evaluated with a **masked Horner scheme** over the full d columns (excluded
+columns are skipped), so the whole (batch, n_combos) fingerprint matrix is a
+static d-step loop of vectorized uint32 ops -- no gathers, TPU-friendly.
+
+Two independent random bases give two 31-bit fingerprints; the pair is the
+sketch key.  Collision probability per distinct sub-value pair is
+<= ((d+1)/p)^2 ~ 3e-17, matching the paper's 64-bit Rabin fingerprints.
+
+The combination id (the integer column bitmask) seeds the Horner state so
+identical values under different projections never collide by construction
+(the paper's "attach the projection ordering" device).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .hashing import P31, addmod_p31, mulmod_p31, reduce_p31, random_field_elements
+
+
+def make_fingerprint_bases(rng: np.random.Generator) -> np.ndarray:
+    """Two independent random bases in [2, p) -- shape (2,) uint32."""
+    return (random_field_elements(rng, (2,)) % np.uint32(int(P31) - 2)) + np.uint32(2)
+
+
+def subvalue_fingerprints(values, combo_masks, combo_ids, bases):
+    """Fingerprint every (record, combination) sub-value.
+
+    Args:
+      values: (B, d) uint32 record columns (arbitrary uint32; reduced mod p).
+      combo_masks: (M, d) {0,1} uint32 column-inclusion masks.
+      combo_ids: (M,) uint32 unique combination ids (the column bitmask).
+      bases: (2,) uint32 fingerprint bases.
+
+    Returns:
+      (fp1, fp2): each (B, M) uint32 canonical field elements.
+    """
+    values = reduce_p31(values)                      # (B, d)
+    d = values.shape[-1]
+    seed = addmod_p31(reduce_p31(combo_ids), jnp.uint32(1))   # (M,)
+
+    outs = []
+    for base in (bases[0], bases[1]):
+        fp = jnp.broadcast_to(seed[None, :], (values.shape[0], combo_ids.shape[0]))
+        for col in range(d):
+            v = addmod_p31(values[:, col:col + 1], jnp.uint32(1))       # (B, 1)
+            nxt = addmod_p31(mulmod_p31(fp, base), v)                   # (B, M)
+            fp = jnp.where(combo_masks[None, :, col] != 0, nxt, fp)
+        outs.append(fp)
+    return outs[0], outs[1]
+
+
+def np_subvalue_fingerprints(values, combo_masks, combo_ids, bases):
+    """NumPy uint64 oracle for the kernel tests."""
+    p = np.uint64(int(P31))
+    values = values.astype(np.uint64) % p
+    B, d = values.shape
+    M = combo_ids.shape[0]
+    outs = []
+    for base in bases.astype(np.uint64):
+        fp = np.broadcast_to((combo_ids.astype(np.uint64) % p + 1) % p, (B, M)).copy()
+        for col in range(d):
+            v = (values[:, col:col + 1] + 1) % p
+            nxt = (fp * base + v) % p
+            fp = np.where(combo_masks[None, :, col] != 0, nxt, fp)
+        outs.append(fp.astype(np.uint32))
+    return outs[0], outs[1]

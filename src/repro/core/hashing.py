@@ -1,0 +1,144 @@
+"""4-universal hashing over GF(2^31 - 1) in pure uint32 arithmetic.
+
+TPU adaptation of the paper's Carter-Wegman polynomial hashing: TPUs have no
+64-bit integer multiplier, so instead of the usual p = 2^61 - 1 field we work
+in the Mersenne-31 field p = 2^31 - 1 and implement ``a * b mod p`` with
+16-bit limb decomposition -- every intermediate product fits in uint32.
+Degree-3 polynomials keep the 4-universality guarantee *exact* (it is a
+property of the field, not of its width).  The narrower field only affects
+fingerprint collision probability, which is compensated by double
+fingerprinting (see :mod:`repro.core.fingerprint`).
+
+All functions are shape-polymorphic jnp ops usable inside jit / shard_map /
+Pallas (the same limb arithmetic is reused by the Pallas kernels).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Mersenne prime 2^31 - 1.
+P31 = np.uint32(0x7FFFFFFF)
+_U16 = np.uint32(0xFFFF)
+_ONE = np.uint32(1)
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def fold_p31(x):
+    """One folding step of reduction mod 2^31-1: x -> (x & p) + (x >> 31).
+
+    For x < 2^32 the result is < 2^31 + 2 and congruent to x (mod p).
+    """
+    x = _u32(x)
+    return (x & P31) + (x >> np.uint32(31))
+
+
+def reduce_p31(x):
+    """Fully reduce a uint32 into the canonical range [0, p)."""
+    x = fold_p31(fold_p31(x))
+    return jnp.where(x >= P31, x - P31, x)
+
+
+def mulmod_p31(a, b):
+    """(a * b) mod (2^31 - 1) for canonical a, b in [0, p), pure uint32.
+
+    16-bit limb decomposition: a = a1*2^16 + a0, b = b1*2^16 + b0 with
+    a1, b1 < 2^15; every partial product fits in uint32.  The 64-bit product
+    hi*2^32 + lo is reduced using 2^31 = 1 (mod p).
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a0 = a & _U16
+    a1 = a >> np.uint32(16)
+    b0 = b & _U16
+    b1 = b >> np.uint32(16)
+
+    hihi = a1 * b1                      # < 2^30
+    mid = a1 * b0 + a0 * b1             # < 2^32 (each term < 2^31)
+    lolo = a0 * b0                      # < 2^32
+
+    mid_lo = mid << np.uint32(16)       # low 16 bits of mid, shifted
+    lo = lolo + mid_lo                  # wraps mod 2^32
+    carry = (lo < lolo).astype(jnp.uint32)
+    hi = hihi + (mid >> np.uint32(16)) + carry   # <= 2^30 + 2^16 + 1
+
+    # x = hi*2^32 + lo ≡ 2*hi + (lo >> 31) + (lo & p)   (mod p)
+    t = (hi << _ONE) + (lo >> np.uint32(31))      # <= 2^31 + 3, fits
+    t = fold_p31(t)                               # <= p + 1
+    r = t + (lo & P31)                            # < 2^32
+    r = fold_p31(r)
+    r = fold_p31(r)
+    return jnp.where(r >= P31, r - P31, r)
+
+
+def addmod_p31(a, b):
+    """(a + b) mod p for canonical a, b in [0, p)."""
+    r = _u32(a) + _u32(b)               # < 2^32
+    r = fold_p31(r)
+    return jnp.where(r >= P31, r - P31, r)
+
+
+def cw_hash(x, coeffs):
+    """Degree-3 Carter-Wegman polynomial hash: 4-universal on [0, p).
+
+    ``x``: canonical field elements, any shape.
+    ``coeffs``: (..., 4) canonical field elements, broadcast against x
+      (typically shape (4,) or (t, 4) with x expanded).
+    Returns canonical field elements, shape = broadcast(x, coeffs[..., 0]).
+    """
+    x = _u32(x)
+    c = _u32(coeffs)
+    h = jnp.broadcast_to(c[..., 3], jnp.broadcast_shapes(x.shape, c[..., 3].shape))
+    h = addmod_p31(mulmod_p31(h, x), c[..., 2])
+    h = addmod_p31(mulmod_p31(h, x), c[..., 1])
+    h = addmod_p31(mulmod_p31(h, x), c[..., 0])
+    return h
+
+
+def cw_hash_pair(x, y, coeffs):
+    """4-universal hash of a pair of field elements.
+
+    Sum of two independent degree-3 CW hashes is 4-wise independent on
+    distinct pairs.  ``coeffs``: (..., 2, 4).
+    """
+    return addmod_p31(cw_hash(x, coeffs[..., 0, :]), cw_hash(y, coeffs[..., 1, :]))
+
+
+def hash_bucket(h, width):
+    """Map a field element to a bucket in [0, width); width must be pow2.
+
+    Bias relative to uniform is O(width / 2^31) -- negligible for the sketch
+    widths used here (<= 2^20).
+    """
+    return (h & np.uint32(width - 1)).astype(jnp.int32)
+
+
+def hash_sign(h):
+    """Map a field element to ±1 (int32)."""
+    return (_ONE.astype(jnp.int32) - (h & _ONE).astype(jnp.int32) * 2)
+
+
+def random_field_elements(rng: np.random.Generator, shape) -> np.ndarray:
+    """Uniform elements of [0, p) as a uint32 numpy array (host-side init)."""
+    return rng.integers(0, int(P31), size=shape, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# NumPy uint64 oracle (tests validate the limb arithmetic against this).
+# ---------------------------------------------------------------------------
+
+def np_mulmod_p31(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return ((a.astype(np.uint64) * b.astype(np.uint64)) % np.uint64(int(P31))).astype(np.uint32)
+
+
+def np_cw_hash(x: np.ndarray, coeffs: np.ndarray) -> np.ndarray:
+    p = np.uint64(int(P31))
+    x64 = x.astype(np.uint64)
+    c = coeffs.astype(np.uint64)
+    h = np.broadcast_to(c[..., 3], np.broadcast_shapes(x64.shape, c[..., 3].shape)).copy()
+    for i in (2, 1, 0):
+        h = (h * x64 + c[..., i]) % p
+    return h.astype(np.uint32)

@@ -1,0 +1,239 @@
+"""SJPC -- Similarity Self-Join Pair Count (the paper's Algorithm 1).
+
+One-pass, sublinear-space estimation of g_s = #{record pairs at least
+s-similar} for a stream of d-column records:
+
+  Step 1  per record, per level k in [s, d]: sample ~r*C(d,k) column
+          combinations, fingerprint each projected sub-value, insert into
+          the level's Fast-AGMS sketch.
+  Step 2  Y_k = sketch F2 estimate of the level-k sub-value stream.
+  Step 3  invert the lattice system (Eq. 4):
+              X_k = (Y_k - r*C(d,k)*n) / r^2  -  sum_{j>k} C(j,k) X_j
+          and return sum_k X_k (+ n for self-pairs -> g_s).
+
+State is a pytree of int32 counters (levels, t, w) -- linear, so
+data-parallel shards merge by addition (``jax.lax.psum``) and merging can be
+deferred arbitrarily.  ``update`` is pure jnp (jit/shard_map-safe); the
+Pallas-accelerated path swaps in kernels.ops.sketch_update_fused.
+
+The similarity *join* estimator (paper §6, Eq. 7) works on two streams
+sketched with the *same* hash parameters; Y_k is then the sketch inner
+product and the inversion drops the self-pair term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import projections as proj
+from . import sketch as sk
+from .fingerprint import make_fingerprint_bases, subvalue_fingerprints
+
+
+@dataclasses.dataclass(frozen=True)
+class SJPCConfig:
+    """Static configuration (hashable; safe to close over in jit)."""
+    d: int                  # record dimensionality (number of columns)
+    s: int                  # similarity threshold (count of equal columns)
+    ratio: float = 0.5      # projection sampling ratio r
+    width: int = 1024       # sketch width w (counters per row, pow2)
+    depth: int = 3          # sketch depth t (median of t estimates)
+    seed: int = 0x5A5A
+
+    def __post_init__(self):
+        assert 1 <= self.s <= self.d, "need 1 <= s <= d"
+        assert 0 < self.ratio <= 1.0
+        assert self.width & (self.width - 1) == 0
+
+    @property
+    def num_levels(self) -> int:
+        return self.d - self.s + 1
+
+    def level_k(self, idx: int) -> int:
+        return self.s + idx
+
+    @property
+    def counters_bytes(self) -> int:
+        return self.num_levels * self.depth * self.width * 4
+
+
+class SJPCParams(NamedTuple):
+    """Hash/fingerprint randomness (arrays; checkpointed with the state)."""
+    bucket_coeffs: jax.Array   # (levels, t, 2, 4) uint32
+    sign_coeffs: jax.Array     # (levels, t, 2, 4) uint32
+    fp_bases: jax.Array        # (2,) uint32
+
+
+class SJPCState(NamedTuple):
+    """Linear sketch state.  counters: (levels, t, w) int32; n: records seen."""
+    counters: jax.Array
+    n: jax.Array               # float32 scalar (exact for n < 2^24; int path below)
+    step: jax.Array            # int32 PRNG folding counter
+
+
+def init(cfg: SJPCConfig) -> tuple[SJPCParams, SJPCState]:
+    rng = np.random.default_rng(cfg.seed)
+    params = sk.make_sketch_params(rng, cfg.depth, stack=(cfg.num_levels,))
+    fp_bases = make_fingerprint_bases(rng)
+    state = SJPCState(
+        counters=sk.empty_counters(cfg.depth, cfg.width, stack=(cfg.num_levels,)),
+        n=jnp.zeros((), jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+    )
+    return SJPCParams(params.bucket_coeffs, params.sign_coeffs, jnp.asarray(fp_bases)), state
+
+
+def _level_tables(cfg: SJPCConfig):
+    return proj.lattice(cfg.d, cfg.s)
+
+
+def update(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
+           key: jax.Array | None = None, *, update_fn=None) -> SJPCState:
+    """Absorb a batch of records.  values: (B, d) uint32/int32.
+
+    ``update_fn(counters, fp1, fp2, level_params, weights) -> counters`` lets
+    callers swap the reference jnp update for the Pallas kernel; default is
+    the reference.
+    """
+    values = jnp.asarray(values).astype(jnp.uint32)
+    B = values.shape[0]
+    if key is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xC0FFEE), state.step)
+    update_fn = update_fn or sk.sketch_update
+
+    counters = state.counters
+    new_counters = []
+    for idx, level in enumerate(_level_tables(cfg)):
+        lkey = jax.random.fold_in(key, idx)
+        weights = proj.sample_combo_weights(lkey, B, level.num, cfg.ratio)
+        fp1, fp2 = subvalue_fingerprints(
+            values, jnp.asarray(level.masks), jnp.asarray(level.ids), params.fp_bases)
+        level_params = sk.SketchParams(params.bucket_coeffs[idx], params.sign_coeffs[idx])
+        new_counters.append(update_fn(counters[idx], fp1, fp2, level_params, weights))
+    return SJPCState(
+        counters=jnp.stack(new_counters),
+        n=state.n + jnp.float32(B),
+        step=state.step + 1,
+    )
+
+
+def merge(a: SJPCState, b: SJPCState) -> SJPCState:
+    """Linearity: sketches of disjoint sub-streams add."""
+    return SJPCState(a.counters + b.counters, a.n + b.n, jnp.maximum(a.step, b.step))
+
+
+def all_reduce(state: SJPCState, axis_names) -> SJPCState:
+    """Merge device-local sketches across mesh axes (inside shard_map/pjit)."""
+    return SJPCState(
+        counters=jax.lax.psum(state.counters, axis_names),
+        n=jax.lax.psum(state.n, axis_names),
+        step=state.step,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step 2+3: estimation (host-side numpy; cheap, exact in float64)
+# ---------------------------------------------------------------------------
+
+def level_f2(state: SJPCState) -> np.ndarray:
+    """Y_k for k = s..d, int64-exact median-of-rows F2."""
+    counters = np.asarray(jax.device_get(state.counters))
+    return sk.np_estimate_f2_exact(counters).astype(np.float64)
+
+
+def f2_to_pair_count(d: int, s: int, n: float, r: float, y: Sequence[float],
+                     *, clamp: bool = True) -> np.ndarray:
+    """Procedure f2toPairCnt of Algorithm 1 (Eq. 4 inversion).
+
+    ``y[i]`` is the level-(s+i) self-join size estimate.  Returns X[s..d]
+    (estimated #pairs exactly k-similar, ordered-pair convention).
+
+    NOTE (paper erratum): Algorithm 1 line 34 subtracts ``r^2 C(j,k) X[j]``
+    from the *r^2-scaled* accumulator (division by r^2 happens only at line
+    38), which applies the r^2 correction twice and biases estimates upward
+    for r < 1.  Multiplying Eq. 4 through by r^2 shows the scaled recursion
+    must subtract ``C(j,k) X_scaled[j]`` -- that is what Lemma 4 proves and
+    what we implement (the two coincide at r = 1; verified unbiased in
+    tests/test_sjpc_estimator.py).
+    """
+    X = np.zeros(d + 1, dtype=np.float64)     # r^2-scaled accumulators
+    for k in range(d, s - 1, -1):
+        acc = float(y[k - s]) - math.comb(d, k) * r * n
+        for j in range(k + 1, d + 1):
+            acc -= math.comb(j, k) * X[j]
+        if clamp:
+            acc = max(acc, 0.0)
+        X[k] = acc
+    X = X / (r * r)
+    return X[s:]
+
+
+class SJPCEstimate(NamedTuple):
+    x: np.ndarray          # X[s..d]: per-level k-similar pair estimates
+    pairs: float           # sum_k X_k (similar pairs, ordered, excl. self)
+    g_s: float             # pairs + n (the paper's g_s, Eq. 2)
+    y: np.ndarray          # raw level F2 estimates (diagnostics)
+    n: float
+
+
+def estimate(cfg: SJPCConfig, state: SJPCState, *, clamp: bool = True) -> SJPCEstimate:
+    y = level_f2(state)
+    n = float(jax.device_get(state.n))
+    x = f2_to_pair_count(cfg.d, cfg.s, n, cfg.ratio, y, clamp=clamp)
+    pairs = float(x.sum())
+    return SJPCEstimate(x=x, pairs=pairs, g_s=pairs + n, y=y, n=n)
+
+
+# ---------------------------------------------------------------------------
+# Similarity join (two streams; paper §6)
+# ---------------------------------------------------------------------------
+
+def join_level_inner(state_a: SJPCState, state_b: SJPCState) -> np.ndarray:
+    ca = np.asarray(jax.device_get(state_a.counters)).astype(np.int64)
+    cb = np.asarray(jax.device_get(state_b.counters)).astype(np.int64)
+    prod = (ca * cb).sum(axis=-1)
+    return np.median(prod, axis=-1).astype(np.float64)
+
+
+def inner_to_join_count(d: int, s: int, r: float, y: Sequence[float],
+                        *, clamp: bool = True) -> np.ndarray:
+    """Eq. 7: X_k = Y_k / r^2 - sum_{j>k} C(j,k) X_j (no self-pair term)."""
+    X = np.zeros(d + 1, dtype=np.float64)
+    for k in range(d, s - 1, -1):
+        acc = float(y[k - s]) / (r * r)
+        for j in range(k + 1, d + 1):
+            acc -= math.comb(j, k) * X[j]
+        if clamp:
+            acc = max(acc, 0.0)
+        X[k] = acc
+    return X[s:]
+
+
+def estimate_join(cfg: SJPCConfig, state_a: SJPCState, state_b: SJPCState,
+                  *, clamp: bool = True) -> SJPCEstimate:
+    """Similarity join size of two streams sketched with identical params."""
+    y = join_level_inner(state_a, state_b)
+    x = inner_to_join_count(cfg.d, cfg.s, cfg.ratio, y, clamp=clamp)
+    pairs = float(x.sum())
+    return SJPCEstimate(x=x, pairs=pairs, g_s=pairs, y=y,
+                        n=float(jax.device_get(state_a.n)))
+
+
+# ---------------------------------------------------------------------------
+# Analytical bounds (Theorems 1-3) -- used in tests and EXPERIMENTS.md
+# ---------------------------------------------------------------------------
+
+def offline_variance_bound(d: int, s: int, r: float, g_s: float) -> float:
+    """Theorem 1: var(G_s / g_s) <= C(d,s)^2 (1/r) C(2(d-s), d-s) / g_s."""
+    return math.comb(d, s) ** 2 / r * math.comb(2 * (d - s), d - s) / g_s
+
+
+def online_variance_bound(d: int, s: int, r: float, w: int, n: float, g_s: float) -> float:
+    """Theorem 2 (depth-1 sketch)."""
+    lead = math.comb(d, s) ** 2 / r * math.comb(2 * (d - s), d - s)
+    return lead * ((1 + 2 / w) / g_s + (2 / w) * (1 + n / (r * g_s)) ** 2)

@@ -1,0 +1,103 @@
+"""Fast-AGMS (Count-Sketch) self-join / join size sketches.
+
+One sketch = (depth t, width w) int32 counters plus two 4-universal hash
+families (bucket + sign), each taking the *pair* of fingerprint components as
+its key.  Linear: merging two sketches of disjoint sub-streams is counter
+addition -- this is what makes the distributed deferred-merge design work
+(each data-parallel worker accumulates locally; `psum` at query time).
+
+F2 (self-join size) estimate  = median over rows of  sum_j C[i,j]^2.
+Inner product (join size)     = median over rows of  sum_j A[i,j]*B[i,j].
+
+The pure-jnp update here is the reference implementation; the Pallas kernel
+in :mod:`repro.kernels.sketch_update` computes the same counters with a
+one-hot matmul on the MXU (no scatter).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .hashing import cw_hash_pair, hash_bucket, hash_sign, random_field_elements
+
+
+class SketchParams(NamedTuple):
+    """Hash coefficients for a stack of sketches.
+
+    bucket_coeffs / sign_coeffs: (..., t, 2, 4) uint32 field elements.
+    A leading dimension stacks independent sketches (one per lattice level).
+    """
+    bucket_coeffs: jax.Array
+    sign_coeffs: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return self.bucket_coeffs.shape[-3]
+
+
+def make_sketch_params(rng: np.random.Generator, depth: int, *, stack: tuple = ()) -> SketchParams:
+    shape = tuple(stack) + (depth, 2, 4)
+    return SketchParams(
+        bucket_coeffs=jnp.asarray(random_field_elements(rng, shape)),
+        sign_coeffs=jnp.asarray(random_field_elements(rng, shape)),
+    )
+
+
+def empty_counters(depth: int, width: int, *, stack: tuple = ()) -> jax.Array:
+    assert width & (width - 1) == 0, "sketch width must be a power of two"
+    return jnp.zeros(tuple(stack) + (depth, width), dtype=jnp.int32)
+
+
+def sketch_buckets_signs(fp1, fp2, params: SketchParams, width: int):
+    """Hash keys for all rows: returns buckets (t, N) int32, signs (t, N) int32."""
+    t = params.depth
+    fp1 = fp1.reshape(-1)
+    fp2 = fp2.reshape(-1)
+    hb = cw_hash_pair(fp1[None, :], fp2[None, :], params.bucket_coeffs[:, None, :, :])
+    hs = cw_hash_pair(fp1[None, :], fp2[None, :], params.sign_coeffs[:, None, :, :])
+    del t
+    return hash_bucket(hb, width), hash_sign(hs)
+
+
+def sketch_update(counters, fp1, fp2, params: SketchParams, weights=None):
+    """Insert a batch of keys into one sketch (reference implementation).
+
+    counters: (t, w) int32.  fp1/fp2: any shape (flattened).  weights:
+    broadcastable int32 (0 masks an element out, matching the stochastic
+    rounding of the projection sample).
+    """
+    t, w = counters.shape
+    buckets, signs = sketch_buckets_signs(fp1, fp2, params, w)   # (t, N)
+    if weights is not None:
+        signs = signs * jnp.broadcast_to(weights.reshape(-1)[None, :], signs.shape).astype(jnp.int32)
+
+    def row_update(row, b, s):
+        return row.at[b].add(s)
+
+    return jax.vmap(row_update)(counters, buckets, signs)
+
+
+def estimate_f2(counters) -> jax.Array:
+    """Median-of-rows second-moment estimate.  counters: (..., t, w)."""
+    sq = jnp.sum(counters.astype(jnp.float32) ** 2, axis=-1)
+    return jnp.median(sq, axis=-1)
+
+
+def estimate_inner(counters_a, counters_b) -> jax.Array:
+    """Median-of-rows inner-product (join size) estimate."""
+    prod = jnp.sum(counters_a.astype(jnp.float32) * counters_b.astype(jnp.float32), axis=-1)
+    return jnp.median(prod, axis=-1)
+
+
+def np_estimate_f2_exact(counters: np.ndarray) -> np.ndarray:
+    """int64-exact F2 (offline/oracle path; jnp uses f32 on-device)."""
+    sq = (counters.astype(np.int64) ** 2).sum(axis=-1)
+    return np.median(sq, axis=-1)
+
+
+def merge(counters_a, counters_b):
+    """Sketch linearity: union of sub-streams = counter addition."""
+    return counters_a + counters_b

@@ -1,0 +1,4 @@
+from .synthetic import (dblp_like, shingle_records, near_uniform_40_60,
+                        skewed, yfcc_like, zipf_tokens)
+from .recordize import records_from_tokens
+from .loader import token_batches, sharded_put

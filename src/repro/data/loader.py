@@ -1,0 +1,29 @@
+"""Host-side streaming loader: seeded token batches placed onto the mesh.
+
+``token_batches`` is an infinite iterator of {tokens, labels} numpy batches
+(labels = tokens shifted left, last position masked via label -1 -> masked
+in loss by the driver).  ``sharded_put`` places a host batch as a global
+array with the given sharding (single-process: device_put with
+NamedSharding; the API shape matches multi-host
+``jax.make_array_from_process_local_data``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from .synthetic import zipf_tokens
+
+
+def token_batches(batch: int, seq: int, vocab: int, *, seed: int = 0,
+                  dup_fraction: float = 0.05):
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = zipf_tokens(rng, batch, seq + 1, vocab, dup_fraction=dup_fraction)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+
+def sharded_put(batch: dict, sharding=None) -> dict:
+    if sharding is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}

@@ -1,0 +1,54 @@
+"""Token sequences -> d-column super-shingle records (the paper's
+DBLPtitles construction applied to the LM data stream).
+
+Each training sequence is split into ``d`` equal spans; every span is
+reduced to one uint32 column value with a polynomial fingerprint over the
+token ids (mod 2^31-1, same field as the sketch hashing).  Two sequences
+that share >= s spans verbatim are s-similar records -- exactly the
+near-duplicate signal the SJPC stream monitor estimates.
+
+Pure jnp: rides inside train_step under jit/shard_map.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import P31, addmod_p31, mulmod_p31, reduce_p31
+
+SHINGLE_BASE = np.uint32(1_000_003)
+
+
+def records_from_tokens(tokens, d: int):
+    """tokens (B, S) int32 -> records (B, d) uint32.
+
+    S need not divide d; the tail tokens fold into the last span.
+    """
+    b, s = tokens.shape
+    span = s // d
+    vals = reduce_p31(tokens.astype(jnp.uint32) + jnp.uint32(1))
+    cols = []
+    for i in range(d):
+        lo = i * span
+        hi = (i + 1) * span if i < d - 1 else s
+        h = jnp.zeros((b,), jnp.uint32)
+        for j in range(lo, hi):
+            h = addmod_p31(mulmod_p31(h, SHINGLE_BASE), vals[:, j])
+        cols.append(h)
+    return jnp.stack(cols, axis=1)
+
+
+def np_records_from_tokens(tokens: np.ndarray, d: int) -> np.ndarray:
+    """NumPy oracle (tests)."""
+    p = np.uint64(int(P31))
+    b, s = tokens.shape
+    span = s // d
+    vals = (tokens.astype(np.uint64) + 1) % p
+    out = np.zeros((b, d), dtype=np.uint32)
+    for i in range(d):
+        lo, hi = i * span, ((i + 1) * span if i < d - 1 else s)
+        h = np.zeros((b,), np.uint64)
+        for j in range(lo, hi):
+            h = (h * np.uint64(int(SHINGLE_BASE)) + vals[:, j]) % p
+        out[:, i] = h.astype(np.uint32)
+    return out

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the SJPC hot path (validated in interpret mode on
+CPU against the pure-jnp oracles in ref.py)."""
+from .ops import fingerprint, sketch_update, sketch_moments, make_sjpc_update_fn  # noqa: F401

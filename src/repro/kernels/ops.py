@@ -1,0 +1,93 @@
+"""Public jit'd entry points for the SJPC kernels.
+
+``use_pallas`` selects the Pallas path (interpret=True on CPU -- this
+container -- or compiled on real TPU); the default dispatch picks Pallas on
+TPU backends and the pure-jnp reference elsewhere, so the library is always
+correct and becomes fast where it matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import SketchParams
+from . import ref
+from .fingerprint import fingerprint_pallas
+from .sketch_update import sketch_update_pallas
+from .sketch_moments import sketch_moments_pallas
+from .flash_attention import flash_attention as flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fingerprint(values, combo_masks, combo_ids, bases, *, use_pallas=None,
+                interpret=None):
+    """(B, d) records -> two (B, M) sub-value fingerprints."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.fingerprint_ref(values, combo_masks, combo_ids, bases)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return fingerprint_pallas(values, combo_masks, combo_ids, bases,
+                              interpret=interpret)
+
+
+def sketch_update(counters, fp1, fp2, params: SketchParams, weights,
+                  *, use_pallas=None, interpret=None):
+    """Fast-AGMS update of one (t, w) sketch with flat fingerprint keys."""
+    if weights is None:
+        weights = jnp.ones(fp1.reshape(-1).shape, jnp.int32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.sketch_update_ref(counters, fp1, fp2,
+                                     params.bucket_coeffs, params.sign_coeffs,
+                                     weights)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return sketch_update_pallas(counters, fp1, fp2,
+                                params.bucket_coeffs, params.sign_coeffs,
+                                weights, interpret=interpret)
+
+
+def sketch_moments(counters_a, counters_b=None, *, use_pallas=None,
+                   interpret=None):
+    """Row inner products; F2 when counters_b is None."""
+    if counters_b is None:
+        counters_b = counters_a
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.sketch_moments_ref(counters_a, counters_b)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return sketch_moments_pallas(counters_a, counters_b, interpret=interpret)
+
+
+def make_sjpc_update_fn(*, use_pallas=None, interpret=None):
+    """An ``update_fn`` for :func:`repro.core.sjpc.update` using kernels."""
+    def fn(counters, fp1, fp2, level_params, weights):
+        return sketch_update(counters, fp1, fp2, level_params, weights,
+                             use_pallas=use_pallas, interpret=interpret)
+    return fn
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    use_pallas=None, interpret=None):
+    """Memory-optimal attention (B,Sq,H,hd)x(B,Skv,KV,hd)->(B,Sq,H,hd).
+
+    Pallas path keeps the score tiles in VMEM (the fix for the dominant
+    memory term of train/prefill cells; EXPERIMENTS.md §Perf It. 4); the
+    fallback is the jnp online-softmax chunked implementation.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal,
+                                 q_chunk=block_q, kv_chunk=block_k)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_kernel(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels/tests assert against
+(`np.testing.assert_allclose` / exact equality for integer outputs).  These
+are also the implementations used on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import cw_hash_pair, hash_bucket, hash_sign
+from repro.core.fingerprint import subvalue_fingerprints as _fp_ref
+
+
+def fingerprint_ref(values, combo_masks, combo_ids, bases):
+    """(B, d) records x (M, d) combination masks -> two (B, M) fingerprints."""
+    return _fp_ref(values, combo_masks, combo_ids, bases)
+
+
+def sketch_update_ref(counters, fp1, fp2, bucket_coeffs, sign_coeffs, weights):
+    """Scatter-add reference for the Fast-AGMS update.
+
+    counters: (t, w) int32; fp1/fp2/weights: (N,) flat.
+    """
+    t, w = counters.shape
+    fp1 = fp1.reshape(-1)
+    fp2 = fp2.reshape(-1)
+    weights = weights.reshape(-1).astype(jnp.int32)
+
+    def row(c_row, bc, sc):
+        b = hash_bucket(cw_hash_pair(fp1, fp2, bc), w)
+        s = hash_sign(cw_hash_pair(fp1, fp2, sc)) * weights
+        return c_row.at[b].add(s)
+
+    return jax.vmap(row)(counters, bucket_coeffs, sign_coeffs)
+
+
+def sketch_moments_ref(counters_a, counters_b):
+    """Row-wise inner products  sum_j A[i,j] * B[i,j]  -> (t,) float32.
+
+    F2 = sketch_moments_ref(c, c); join inner product uses two sketches.
+    """
+    return jnp.sum(counters_a.astype(jnp.float32) * counters_b.astype(jnp.float32),
+                   axis=-1)

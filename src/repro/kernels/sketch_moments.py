@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: row-wise sketch moments (F2 / inner product).
+
+For counters A, B of shape (t, w): out[i] = sum_j A[i, j] * B[i, j] in
+float32 (exact for SJPC counter magnitudes: |c| <= stream length < 2^24
+per the paper's O(log n)-bit counter analysis).  F2 is the self case A = B;
+the similarity-join estimator (§6) uses two different sketches.
+
+Width is blocked over a sequential grid dimension with a VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 2048
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    gw = pl.program_id(0)
+
+    @pl.when(gw == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(a * b, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def sketch_moments_pallas(counters_a, counters_b, *,
+                          block_w: int = DEFAULT_BLOCK_W,
+                          interpret: bool = True):
+    """(t, w) x (t, w) -> (t,) float32 row inner products."""
+    t, w = counters_a.shape
+    bw = min(block_w, w)
+    assert w % bw == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(w // bw,),
+        in_specs=[
+            pl.BlockSpec((t, bw), lambda gw: (0, gw)),
+            pl.BlockSpec((t, bw), lambda gw: (0, gw)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda gw: (0,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=interpret,
+    )(counters_a, counters_b)

@@ -1,0 +1,104 @@
+"""Serving steps: prefill and single-token decode with sharded KV caches.
+
+Two cache sharding regimes (DESIGN.md §6):
+  - ``decode_32k`` (batch >= data shards): batch over data axes, KV heads
+    over model.
+  - ``long_500k`` (batch < data shards): *sequence* over data axes --
+    distributed-softmax decode; the score vector all-gather is tiny
+    compared to the cache it avoids replicating.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models import model as M
+from repro.models.config import ArchConfig, Dims
+from . import shardings as SH
+from .mesh import batch_axes, data_shards
+
+
+def seq_sharded_mode(mesh, batch: int) -> bool:
+    return mesh is not None and batch < data_shards(mesh)
+
+
+def make_prefill(cfg: ArchConfig, dims: Dims, mesh=None, *,
+                 ssm_chunk: int = 128, attn_chunk: int = 2048,
+                 compute_dtype=jnp.bfloat16):
+    act_spec = SH.activation_pspec(mesh) if mesh is not None else None
+
+    def prefill_fn(params, tokens, enc_feats=None):
+        return M.prefill(params, cfg, dims, tokens, enc_feats=enc_feats,
+                         compute_dtype=compute_dtype, ssm_chunk=ssm_chunk,
+                         act_spec=act_spec, attn_chunk=attn_chunk)
+    return prefill_fn
+
+
+def make_decode_step(cfg: ArchConfig, dims: Dims, mesh=None, *,
+                     compute_dtype=jnp.bfloat16):
+    def decode_fn(params, token, cache):
+        return M.decode_step(params, cfg, dims, token, cache,
+                             compute_dtype=compute_dtype)
+    return decode_fn
+
+
+def greedy_generate(params, cfg: ArchConfig, dims: Dims, prompt, steps: int,
+                    *, max_len: int = None, compute_dtype=jnp.float32,
+                    ssm_chunk: int = 8, enc_feats=None):
+    """Small-scale reference generation loop (examples/tests): prefill the
+    prompt into a padded cache, then greedy decode ``steps`` tokens."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    src_len = enc_feats.shape[1] if enc_feats is not None else 0
+    logits, pcache = M.prefill(params, cfg, dims, prompt, enc_feats=enc_feats,
+                               compute_dtype=compute_dtype, ssm_chunk=ssm_chunk)
+    cache = M.init_cache(cfg, dims, b, max_len, src_len=src_len,
+                         dtype=compute_dtype)
+    cache = _rebase_cache(cache, pcache, s)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = M.decode_step(params, cfg, dims, tok, cache,
+                                      compute_dtype=compute_dtype)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def _rebase_cache(empty: M.Cache, pcache: M.Cache, prompt_len: int) -> M.Cache:
+    """Copy prefill K/V (length S) into the max_len decode cache; carry
+    mamba states and cross memories through."""
+    def merge(path, e, p):
+        names = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+        name = names[-1] if names else None
+        if name in ("k", "v"):
+            return jax.lax.dynamic_update_slice_in_dim(
+                e, p.astype(e.dtype), 0, axis=2)   # (layers, B, S, KV, hd)
+        return p.astype(e.dtype) if e.shape == p.shape else p
+
+    # prefill cache groups have same tree structure per layer for k/v/mamba;
+    # walk the two trees together.
+    groups = jax.tree_util.tree_map_with_path(
+        merge, empty.groups, pcache.groups)
+    return M.Cache(groups=groups, lens=pcache.lens)
+
+
+def cache_shardings(mesh, cfg: ArchConfig, dims: Dims, batch: int,
+                    max_len: int, src_len: int = 0, dtype=jnp.bfloat16,
+                    layout: str = "auto"):
+    """(abstract cache, NamedSharding tree) for jit in/out shardings.
+
+    layout: "auto" picks seq-sharding when batch < data shards;
+    "batch"/"seq" force a regime (perf-iteration lever).
+    """
+    abstract = jax.eval_shape(
+        lambda: M.init_cache(cfg, dims, batch, max_len, src_len=src_len,
+                             dtype=dtype))
+    seq = (seq_sharded_mode(mesh, batch) if layout == "auto"
+           else layout == "seq")
+    pspecs = SH.cache_pspecs(mesh, abstract, seq_sharded=seq)
+    return abstract, SH.to_shardings(mesh, pspecs)

@@ -1,0 +1,120 @@
+"""Logical axis names -> mesh PartitionSpecs (t5x/MaxText-style rules).
+
+TP ("model"): attention heads, d_ff columns, vocab, experts, SSM heads.
+FSDP (all batch axes, i.e. ("pod","data") multi-pod / ("data",) single):
+the d_model ("embed"/"embed_out") axis of every large matrix -- XLA
+all-gathers one scanned layer at a time, so peak weight memory per device is
+O(params / (fsdp * tp) + one layer).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .mesh import batch_axes
+
+
+def logical_rules(mesh) -> dict:
+    fsdp = batch_axes(mesh)
+    return {
+        "layers": None,
+        "vocab": "model",
+        "embed": fsdp,
+        "embed_out": fsdp,
+        "heads": "model",
+        "kv": "model",
+        "hd": None,
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "norm": None,
+        "ssm_heads": "model",
+        "ssm_group": None,
+        "state": None,
+        "conv": None,
+        "conv_ch": None,
+    }
+
+
+def _is_axes_tuple(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, str) for a in x)
+
+
+def axes_to_pspec(axes: tuple, rules: dict) -> PartitionSpec:
+    return PartitionSpec(*[rules[a] for a in axes])
+
+
+def param_pspecs(mesh, axes_tree):
+    """Logical-axes tree (from layers.split_tree) -> PartitionSpec tree."""
+    rules = logical_rules(mesh)
+    return jax.tree_util.tree_map(
+        lambda ax: axes_to_pspec(ax, rules), axes_tree, is_leaf=_is_axes_tuple)
+
+
+def param_shardings(mesh, axes_tree):
+    return jax.tree_util.tree_map(
+        lambda ax: NamedSharding(mesh, axes_to_pspec(ax, logical_rules(mesh))),
+        axes_tree, is_leaf=_is_axes_tuple)
+
+
+def activation_pspec(mesh, *, seq_parallel: bool = False) -> PartitionSpec:
+    """(B, S, d) activations: batch over all data axes.
+
+    seq_parallel=True additionally shards the SEQUENCE dim over the model
+    axis between blocks (Megatron sequence parallelism): GSPMD then lowers
+    the TP boundary all-reduces into reduce-scatter + all-gather pairs --
+    half the wire bytes -- and norms/elementwise run on S/tp tokens.
+    """
+    return PartitionSpec(batch_axes(mesh), "model" if seq_parallel else None,
+                         None)
+
+
+def logits_pspec(mesh) -> PartitionSpec:
+    return PartitionSpec(batch_axes(mesh), None, "model")
+
+
+def batch_pspec(mesh) -> PartitionSpec:
+    return PartitionSpec(batch_axes(mesh), None)
+
+
+def cache_pspecs(mesh, cache, *, seq_sharded: bool) -> "jax.tree":
+    """PartitionSpec tree for a model.Cache.
+
+    seq_sharded=True (long-context decode, batch < data shards): attention
+    K/V caches shard their *sequence* dim over the data axes and heads over
+    model; otherwise batch shards over data and heads over model.
+    """
+    bd = batch_axes(mesh)
+    b_ax = None if seq_sharded else bd
+    s_ax = bd if seq_sharded else None
+
+    def spec_for(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        nd = leaf.ndim
+        if name in ("k", "v", "mk", "mv"):
+            # (layers, B, S, KV, hd)
+            return PartitionSpec(None, b_ax, s_ax, "model", None)
+        if name == "ssm":
+            # (layers, B, H, N, P)
+            return PartitionSpec(None, bd if not seq_sharded else None, "model",
+                                 None, None)
+        if name == "x":
+            # conv state (layers, B, K-1, H*P)
+            return PartitionSpec(None, b_ax, None, "model")
+        if name == "bc":
+            return PartitionSpec(None, b_ax, None, None)
+        if nd == 1:      # lens (B,)
+            return PartitionSpec(b_ax)
+        return PartitionSpec(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def to_shardings(mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

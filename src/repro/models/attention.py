@@ -1,0 +1,214 @@
+"""GQA attention: full, chunked-flash (for long sequences), and KV-cache
+decode.  Pure JAX; grouped query layout throughout (no KV head expansion --
+KV heads stay a separate einsum dimension, which matters for both the 32k
+prefill memory footprint and the sharded decode path).
+
+Chunked-flash = lax.scan over (q-chunk x kv-chunk) tiles with the online
+softmax recurrence (running max m, normalizer l, weighted accumulator) --
+the standard memory-bounded attention for 32k+ sequences in pure jnp.  On
+real TPU this is where a splash/flash Pallas kernel would slot in; the
+paper's own kernels are the sketch path, so attention stays jnp (DESIGN.md
+§3).  Causal masking is per-tile; fully-masked tiles are still computed
+(static shapes) -- the ~2x FLOP overhead is visible in the roofline's
+MODEL_FLOPS/HLO ratio and is attacked in the §Perf loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Dims
+from .layers import P, dense_init, zeros_init, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, dims: Dims, *, cross: bool = False) -> dict:
+    cfg = dims.cfg
+    d, h, kv, hd = cfg.d_model, dims.heads, dims.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), ("embed", "heads", "hd")),
+        "wk": dense_init(ks[1], (d, kv, hd), ("embed", "kv", "hd")),
+        "wv": dense_init(ks[2], (d, kv, hd), ("embed", "kv", "hd")),
+        "wo": dense_init(ks[3], (h, hd, d), ("heads", "hd", "embed_out"),
+                         scale=1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = zeros_init((h, hd), ("heads", "hd"))
+        p["bk"] = zeros_init((kv, hd), ("kv", "hd"))
+        p["bv"] = zeros_init((kv, hd), ("kv", "hd"))
+    return p
+
+
+def _project_q(params, x, positions, theta, *, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    if rope:
+        q = apply_rope(q, positions, theta)
+    return q
+
+
+def _project_kv(params, x, positions, theta, *, rope=True):
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope:
+        k = apply_rope(k, positions, theta)
+    return k, v
+
+
+def _grouped(q, kv_heads):
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, hd)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0, kv_valid=None,
+                   probs_dtype=jnp.float32):
+    """Dense attention.  q (B,Sq,H,hd); k,v (B,Skv,KV,hd).
+
+    kv_valid: optional (B, Skv) bool mask of valid cache slots.
+    q_offset: absolute position of q[:, 0] (for causal masking vs a cache).
+    probs_dtype: bf16 halves the O(S^2) probability-matrix HBM traffic (the
+    dominant memory term at 4k+ with materialized attention); softmax max/
+    normalizer stay f32.
+    """
+    kv_h = k.shape[2]
+    qg = _grouped(q, kv_h)                                # (B,Sq,KV,G,hd)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    # bf16 x bf16 -> f32 accumulate on the MXU; casting K to f32 first would
+    # materialize an f32 copy of the whole KV cache per layer (measured as
+    # the dominant decode HBM term in the dry-run; EXPERIMENTS.md §Perf).
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    sq, skv = scores.shape[-2], scores.shape[-1]
+    if causal:
+        qpos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+        scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    if kv_valid is not None:
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(probs_dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs,
+                     v if v.dtype == probs_dtype else v.astype(probs_dtype),
+                     preferred_element_type=jnp.float32)
+    b, sq_, kvh, g, hd = out.shape
+    return out.reshape(b, sq_, kvh * g, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 2048,
+                      kv_chunk: int = 2048, probs_dtype=jnp.float32):
+    """Flash-style online-softmax attention, O(S * chunk) memory."""
+    b, sq, h, hd = q.shape
+    skv, kv_h = k.shape[1], k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    g = h // kv_h
+    scale = 1.0 / np.sqrt(hd)
+
+    qg = _grouped(q, kv_h).reshape(b, nq, q_chunk, kv_h, g, hd)
+    kc = k.reshape(b, nk, kv_chunk, kv_h, hd)
+    vc = v.reshape(b, nk, kv_chunk, kv_h, hd)
+
+    def q_step(_, qi_qblock):
+        qi, qblock = qi_qblock                     # qblock (B, Cq, KV, G, hd)
+        m0 = jnp.full((b, kv_h, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_h, g, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((b, kv_h, g, q_chunk, hd), jnp.float32)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblock, vblock = ki_kv
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblock, kblock,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_chunk, kv_chunk), 0)
+                kpos = ki * kv_chunk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_chunk, kv_chunk), 1)
+                s = jnp.where(qpos >= kpos, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new stays at NEG_INF)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where((m_new > 0.5 * NEG_INF)[..., None], p, 0.0)
+            alpha = jnp.where(m > 0.5 * NEG_INF, jnp.exp(m - m_new), 0.0)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(probs_dtype),
+                vblock.astype(probs_dtype),
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,KV,G,Cq,hd)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    # outs: (nq, B, KV, G, Cq, hd) -> (B, nq, Cq, KV, G, hd) -> (B, S, H, hd)
+    outs = outs.transpose(1, 0, 4, 2, 3, 5)
+    return outs.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+CHUNKED_THRESHOLD = 8192
+
+
+def attention_block(params, x, dims: Dims, positions, *, causal=True,
+                    kv_override=None, rope=True, chunk: int = 2048,
+                    probs_dtype=jnp.float32):
+    """Full train/prefill attention over x (B, S, d).
+
+    ``chunk``: q/kv tile size of the flash-chunked path (perf lever;
+    sequences <= CHUNKED_THRESHOLD use the dense path).
+    """
+    cfg = dims.cfg
+    q = _project_q(params, x, positions, cfg.rope_theta, rope=rope)
+    src = x if kv_override is None else kv_override
+    kv_pos = positions if kv_override is None else (
+        jnp.broadcast_to(jnp.arange(src.shape[1], dtype=jnp.int32)[None],
+                         src.shape[:2]))
+    k, v = _project_kv(params, src, kv_pos, cfg.rope_theta, rope=rope)
+    if x.shape[1] > CHUNKED_THRESHOLD or src.shape[1] > CHUNKED_THRESHOLD:
+        out = chunked_attention(q, k, v, causal=causal, q_chunk=chunk,
+                                kv_chunk=chunk, probs_dtype=probs_dtype)
+    else:
+        out = full_attention(q, k, v, causal=causal, probs_dtype=probs_dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def decode_attention_block(params, x, dims: Dims, cache_k, cache_v, lens,
+                           *, rope=True):
+    """One-token decode against a cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, KV, hd); lens: (B,) current lengths.
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    cfg = dims.cfg
+    b, smax = cache_k.shape[0], cache_k.shape[1]
+    positions = lens[:, None].astype(jnp.int32)                  # (B, 1)
+    q = _project_q(params, x, positions, cfg.rope_theta, rope=rope)
+    k_new, v_new = _project_kv(params, x, positions, cfg.rope_theta, rope=rope)
+    batch_idx = jnp.arange(b)
+    cache_k = cache_k.at[batch_idx, lens].set(k_new[:, 0])
+    cache_v = cache_v.at[batch_idx, lens].set(v_new[:, 0])
+    valid = (jax.lax.broadcasted_iota(jnp.int32, (b, smax), 1)
+             <= lens[:, None])
+    out = full_attention(q, cache_k, cache_v, causal=False, kv_valid=valid)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache_k, cache_v
+
+
+def decode_cross_attention_block(params, x, dims: Dims, mem_k, mem_v):
+    """Cross-attention during decode: static encoder memory, no cache write."""
+    q = _project_q(params, x, jnp.zeros(x.shape[:2], jnp.int32),
+                   dims.cfg.rope_theta, rope=False)
+    out = full_attention(q, mem_k, mem_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])

@@ -1,0 +1,127 @@
+"""Decoder/encoder layer blocks: mixer (attention | mamba) + FFN (dense | MoE)
+with pre-norm residuals, plus the per-layer decode-step variants.
+
+A layer's *spec* is ``(kind, moe)`` with kind in {'A', 'M'}; specs come from
+``config._layer_list`` and drive both init (parameter structure) and apply.
+Everything is shape-static so layers with equal specs stack under lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import Dims
+from . import attention as attn
+from . import ssm
+from .layers import init_rmsnorm, rmsnorm, init_mlp, mlp
+from .moe import init_moe, moe_ffn
+
+
+def init_layer(key, dims: Dims, spec, *, cross: bool = False) -> dict:
+    kind, moe = spec
+    cfg = dims.cfg
+    ks = jax.random.split(key, 4)
+    p = {"mixer_norm": init_rmsnorm(cfg.d_model)}
+    if kind == "A":
+        p["attn"] = attn.init_attention(ks[0], dims)
+    else:
+        p["mamba"] = ssm.init_mamba(ks[0], dims)
+    if cross:
+        p["cross_norm"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn.init_attention(ks[1], dims, cross=True)
+    if cfg.d_ff > 0:
+        p["mlp_norm"] = init_rmsnorm(cfg.d_model)
+        if moe:
+            p["moe"] = init_moe(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.num_experts, cfg.num_shared_experts)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.dense_ff or cfg.d_ff)
+    return p
+
+
+def _ffn(params, x, dims: Dims, aux):
+    cfg = dims.cfg
+    if "moe" in params:
+        h, moe_aux = moe_ffn(params["moe"], rmsnorm(params["mlp_norm"], x, cfg.rms_eps),
+                             num_experts=cfg.num_experts,
+                             top_k=cfg.num_experts_per_tok,
+                             capacity_factor=cfg.capacity_factor)
+        aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()} if aux is not None else aux
+        return x + h, aux
+    if "mlp" in params:
+        return x + mlp(params["mlp"], rmsnorm(params["mlp_norm"], x, cfg.rms_eps)), aux
+    return x, aux
+
+
+def apply_layer(params, x, dims: Dims, spec, *, positions, causal=True,
+                enc_mem=None, aux=None, ssm_chunk: int = ssm.DEFAULT_CHUNK,
+                attn_chunk: int = 2048, probs_dtype=jnp.float32):
+    """Full-sequence layer (train / prefill).  Returns (x, cache_out, aux).
+
+    cache_out carries whatever decode needs: attention K/V of this pass,
+    mamba final states, cross-attention memory K/V.
+    """
+    kind, _ = spec
+    cfg = dims.cfg
+    cache_out = {}
+    h = rmsnorm(params["mixer_norm"], x, cfg.rms_eps)
+    if kind == "A":
+        out, (k, v) = attn.attention_block(params["attn"], h, dims, positions,
+                                           causal=causal, chunk=attn_chunk,
+                                           probs_dtype=probs_dtype)
+        cache_out["k"], cache_out["v"] = k, v
+    else:
+        out, states = ssm.mamba_block(params["mamba"], h, dims, chunk=ssm_chunk)
+        cache_out["mamba"] = states
+    x = x + out
+    if "cross" in params:
+        h = rmsnorm(params["cross_norm"], x, cfg.rms_eps)
+        out, (mk, mv) = attn.attention_block(params["cross"], h, dims, positions,
+                                             causal=False, kv_override=enc_mem,
+                                             chunk=attn_chunk,
+                                             probs_dtype=probs_dtype)
+        cache_out["mk"], cache_out["mv"] = mk, mv
+        x = x + out
+    x, aux = _ffn(params, x, dims, aux)
+    return x, cache_out, aux
+
+
+def decode_layer(params, x, dims: Dims, spec, cache, lens, *, aux=None):
+    """One-token layer step.  x (B,1,d); cache is this layer's state dict."""
+    kind, _ = spec
+    cfg = dims.cfg
+    h = rmsnorm(params["mixer_norm"], x, cfg.rms_eps)
+    new_cache = dict(cache)
+    if kind == "A":
+        out, ck, cv = attn.decode_attention_block(params["attn"], h, dims,
+                                                  cache["k"], cache["v"], lens)
+        new_cache["k"], new_cache["v"] = ck, cv
+    else:
+        out, st = ssm.mamba_decode_step(params["mamba"], h, dims,
+                                        cache["mamba"]["conv"], cache["mamba"]["ssm"])
+        new_cache["mamba"] = st
+    x = x + out
+    if "cross" in params:
+        h = rmsnorm(params["cross_norm"], x, cfg.rms_eps)
+        out = attn.decode_cross_attention_block(params["cross"], h, dims,
+                                                cache["mk"], cache["mv"])
+        x = x + out
+    x, aux = _ffn(params, x, dims, aux)
+    return x, new_cache, aux
+
+
+def init_layer_cache(dims: Dims, spec, batch: int, max_len: int, src_len: int = 0,
+                     dtype=jnp.bfloat16) -> dict:
+    """Zero decode cache for one layer."""
+    kind, _ = spec
+    cfg = dims.cfg
+    c = {}
+    if kind == "A":
+        c["k"] = jnp.zeros((batch, max_len, dims.kv_heads, cfg.head_dim), dtype)
+        c["v"] = jnp.zeros((batch, max_len, dims.kv_heads, cfg.head_dim), dtype)
+    else:
+        c["mamba"] = ssm.init_mamba_state(dims, batch, dtype)
+    if cfg.is_encdec and src_len > 0:
+        c["mk"] = jnp.zeros((batch, src_len, dims.kv_heads, cfg.head_dim), dtype)
+        c["mv"] = jnp.zeros((batch, src_len, dims.kv_heads, cfg.head_dim), dtype)
+    return c

@@ -1,0 +1,154 @@
+"""Common layers: param plumbing with logical sharding axes, norms, MLP,
+embeddings, RoPE.
+
+Parameters are plain pytrees of arrays.  During init every leaf is built as
+a ``P(value, axes)`` pair carrying *logical* axis names; ``split_tree``
+separates the value tree (params) from the axes tree, and
+:mod:`repro.launch.shardings` maps logical names -> mesh axes to produce
+NamedShardings.  This is the t5x/MaxText "logical axis rules" pattern
+without a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class P:
+    """A parameter leaf: array value + *static* logical axis names.
+
+    Registered as a pytree node with ``axes`` as aux data, so vmap / scan /
+    jit treat it as a transparent array container (vmap over init stacks the
+    value and leaves the axis names alone).
+    """
+    value: jax.Array
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_tree(tree):
+    """Tree of P -> (params tree, logical-axes tree)."""
+    params = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_p)
+    return params, axes
+
+
+def add_leading_axis_name(tree, name: str):
+    """Prefix every P's logical axes with ``name`` (stacked-layer params)."""
+    return jax.tree_util.tree_map(
+        lambda p: P(p.value, (name,) + tuple(p.axes)), tree, is_leaf=is_p)
+
+
+def dense_init(key, shape, axes, scale=None, dtype=jnp.float32) -> P:
+    """Truncated-normal fan-in init (LeCun-ish, matching common LM practice)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    return P(v, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> P:
+    return ones_init((d,), ("norm",))
+
+
+def rmsnorm(scale, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> P:
+    return dense_init(key, (vocab, d), ("vocab", "embed"), scale=1.0)
+
+
+def embed(table, token_ids):
+    return jnp.take(table, token_ids, axis=0)
+
+
+def logits(table_or_head, x, *, transpose: bool):
+    """x (..., d) -> (..., vocab).  transpose=True for tied embeddings."""
+    if transpose:
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)
+
+
+def mask_padded_vocab(lg, true_vocab: int):
+    """Padded vocabulary ids never win: set their logits to -inf."""
+    v = lg.shape[-1]
+    if v == true_vocab:
+        return lg
+    neg = jnp.finfo(lg.dtype).min
+    col = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    return jnp.where(col >= true_vocab, neg, lg)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponent))     # (hd/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), ("embed", "mlp")),
+        "w_up": dense_init(k2, (d, ff), ("embed", "mlp")),
+        "w_down": dense_init(k3, (ff, d), ("mlp", "embed_out")),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    h = h * jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

@@ -1,0 +1,328 @@
+"""Arch-config -> init / forward / prefill / decode, with scan-over-layers.
+
+Layers with identical structure are stacked and applied under ``lax.scan``
+(one compiled body per *group* of equal layers; hybrid archs like jamba scan
+over whole periods).  This keeps HLO size O(distinct layer kinds) instead of
+O(num_layers) -- essential for 72-layer 398B dry-run compiles.
+
+Public entry points (all pure; cfg/dims are static):
+
+    init_params(key, cfg, dims)               -> P-tree
+    forward(params, cfg, dims, tokens, ...)   -> (logits, aux)     [train]
+    lm_loss(logits, labels, true_vocab)       -> scalar
+    init_cache(cfg, dims, batch, max_len)     -> cache
+    prefill(params, cfg, dims, tokens, ...)   -> (logits_last, cache)
+    decode_step(params, cfg, dims, token, cache) -> (logits, cache)
+
+Sharding: parameters carry logical axis names (see layers.P); activations
+are annotated via the optional ``act_spec`` (a PartitionSpec for (B, S, d)
+activations) so GSPMD propagation is pinned down at group boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, Dims, _layer_list
+from . import blocks
+from .layers import (P, is_p, add_leading_axis_name, init_embedding, embed,
+                     init_rmsnorm, rmsnorm, mask_padded_vocab, dense_init)
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ArchConfig) -> list[tuple[tuple, int]]:
+    """[(period_specs, repeat_count)] -- consecutive equal periods merge."""
+    specs = _layer_list(cfg)
+    period = cfg.period
+    assert len(specs) % period == 0
+    periods = [tuple(specs[i * period:(i + 1) * period])
+               for i in range(len(specs) // period)]
+    groups: list[tuple[tuple, int]] = []
+    for p in periods:
+        if groups and groups[-1][0] == p:
+            groups[-1] = (p, groups[-1][1] + 1)
+        else:
+            groups.append((p, 1))
+    return groups
+
+
+def _stack_init(key, count: int, init_one):
+    """vmap an init function over ``count`` keys; tag the stacked axis."""
+    keys = jax.random.split(key, count)
+    stacked = jax.vmap(init_one)(keys)
+    return add_leading_axis_name(stacked, "layers")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dims: Dims) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], dims.vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, dims.vocab),
+                                       ("embed", "vocab"))
+    groups = []
+    for gi, (pspec, count) in enumerate(layer_groups(cfg)):
+        gkey = jax.random.fold_in(keys[2], gi)
+
+        def init_one(k, _pspec=pspec):
+            ks = jax.random.split(k, len(_pspec))
+            return tuple(blocks.init_layer(ks[i], dims, _pspec[i],
+                                           cross=cfg.is_encdec)
+                         for i in range(len(_pspec)))
+
+        groups.append(_stack_init(gkey, count, init_one))
+    params["groups"] = groups
+
+    if cfg.is_encdec:
+        def init_enc_layer(k):
+            return (blocks.init_layer(k, dims, ("A", False), cross=False),)
+        params["encoder"] = {
+            "layers": _stack_init(keys[3], cfg.encoder_layers, init_enc_layer),
+            "norm": init_rmsnorm(cfg.d_model),
+        }
+    return params
+
+
+def param_count_tree(params) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda p: p.value if is_p(p) else p, params,
+                               is_leaf=is_p))
+    return sum(int(l.size) for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _maybe_constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def strip_p(tree):
+    """P-tree -> plain array tree (no-op on already-plain trees).
+
+    Apply functions take *plain* params; callers hold the logical-axes tree
+    separately (layers.split_tree) for sharding.
+    """
+    return jax.tree_util.tree_map(lambda p: p.value if is_p(p) else p, tree,
+                                  is_leaf=is_p)
+
+
+def _cast(tree, dtype):
+    tree = strip_p(tree)
+    def f(x):
+        if isinstance(x, jax.Array) and x.dtype == jnp.float32:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(f, tree)
+
+
+def _zero_aux():
+    return {"moe_lb_loss": jnp.zeros((), jnp.float32),
+            "moe_z_loss": jnp.zeros((), jnp.float32)}
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(remat)
+
+
+def _positions(tokens):
+    b, s = tokens.shape[:2]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _run_groups(params, cfg, dims, x, positions, *, causal, enc_mem, remat,
+                ssm_chunk, act_spec, collect_cache=False, attn_chunk=2048,
+                probs_dtype=jnp.float32):
+    """Scan every layer group.  Returns (x, aux, caches|None)."""
+    has_moe = cfg.num_experts > 0
+    aux = _zero_aux() if has_moe else None
+    caches = [] if collect_cache else None
+
+    for (pspec, count), gparams in zip(layer_groups(cfg), params["groups"]):
+
+        def body(carry, pslice, _pspec=pspec):
+            x, aux = carry
+            outs = []
+            for i, spec in enumerate(_pspec):
+                x, cache_out, aux = blocks.apply_layer(
+                    pslice[i], x, dims, spec, positions=positions,
+                    causal=causal, enc_mem=enc_mem, aux=aux,
+                    ssm_chunk=ssm_chunk, attn_chunk=attn_chunk,
+                    probs_dtype=probs_dtype)
+                outs.append(cache_out)
+            x = _maybe_constrain(x, act_spec)
+            return (x, aux), (tuple(outs) if collect_cache else None)
+
+        body = _remat_wrap(body, remat)
+        (x, aux), ys = jax.lax.scan(body, (x, aux), gparams)
+        if collect_cache:
+            caches.append(ys)
+    return x, aux, caches
+
+
+def _encode(params, cfg, dims, enc_feats, *, remat, act_spec):
+    """Encoder stack over precomputed frontend features (B, Ss, d)."""
+    x = enc_feats
+    positions = _positions(x)
+
+    def body(carry, pslice):
+        x, = carry
+        x, _, _ = blocks.apply_layer(pslice[0], x, dims, ("A", False),
+                                     positions=positions, causal=False,
+                                     aux=None)
+        return (_maybe_constrain(x, act_spec),), None
+
+    body = _remat_wrap(body, remat)
+    (x,), _ = jax.lax.scan(body, (x,), params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["norm"], x, cfg.rms_eps)
+
+
+def forward(params, cfg: ArchConfig, dims: Dims, tokens, *, enc_feats=None,
+            compute_dtype=jnp.bfloat16, remat: str = "full",
+            ssm_chunk: int = 128, act_spec=None, logits_spec=None,
+            attn_chunk: int = 2048, probs_dtype=jnp.float32):
+    """Teacher-forced full-sequence forward.  tokens (B, S) int32.
+
+    Returns (logits (B, S, vocab_padded) float32, aux dict).
+    """
+    wp = _cast(params, compute_dtype)
+    x = embed(wp["embed"], tokens)
+    x = _maybe_constrain(x, act_spec)
+    enc_mem = None
+    if cfg.is_encdec:
+        assert enc_feats is not None, "encoder-decoder needs enc_feats"
+        enc_mem = _encode(wp, cfg, dims, enc_feats.astype(compute_dtype),
+                          remat=remat, act_spec=act_spec)
+    x, aux, _ = _run_groups(wp, cfg, dims, x, _positions(tokens),
+                            causal=True, enc_mem=enc_mem, remat=remat,
+                            ssm_chunk=ssm_chunk, act_spec=act_spec,
+                            attn_chunk=attn_chunk, probs_dtype=probs_dtype)
+    x = rmsnorm(wp["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", x, wp["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", x, wp["lm_head"])
+    lg = _maybe_constrain(lg.astype(jnp.float32), logits_spec)
+    return lg, (aux if aux is not None else _zero_aux())
+
+
+def lm_loss(logits, labels, true_vocab: int, *, mask=None):
+    """Cross entropy over the *unpadded* vocabulary (padded cols masked).
+
+    The label term uses the one-hot-einsum form (not a gather) so it lowers
+    to a local partial sum + small all-reduce when vocab is TP-sharded.
+    """
+    lg = mask_padded_vocab(logits, true_vocab)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+    num = jnp.einsum("bsv,bsv->bs", lg, onehot)
+    nll = lse - num
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class Cache(NamedTuple):
+    """Decode state.  groups: per layer-group stacked per-layer caches."""
+    groups: tuple
+    lens: jax.Array            # (B,) tokens already in cache
+
+
+def init_cache(cfg: ArchConfig, dims: Dims, batch: int, max_len: int,
+               src_len: int = 0, dtype=jnp.bfloat16) -> Cache:
+    groups = []
+    for (pspec, count) in layer_groups(cfg):
+        def one(_, _pspec=pspec):
+            return tuple(blocks.init_layer_cache(dims, spec, batch, max_len,
+                                                 src_len, dtype)
+                         for spec in _pspec)
+        stacked = jax.vmap(one)(jnp.arange(count))
+        groups.append(stacked)
+    return Cache(groups=tuple(groups), lens=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params, cfg: ArchConfig, dims: Dims, tokens, *, enc_feats=None,
+            compute_dtype=jnp.bfloat16, ssm_chunk: int = 128, act_spec=None,
+            attn_chunk: int = 2048):
+    """Process a full prompt; returns (last-token logits, Cache).
+
+    The returned attention caches have length = prompt length; the serving
+    runtime re-bases them into a max_len cache (see launch/serve.py).
+    """
+    wp = _cast(params, compute_dtype)
+    x = embed(wp["embed"], tokens)
+    x = _maybe_constrain(x, act_spec)
+    enc_mem = None
+    if cfg.is_encdec:
+        enc_mem = _encode(wp, cfg, dims, enc_feats.astype(compute_dtype),
+                          remat="none", act_spec=act_spec)
+    x, _, caches = _run_groups(wp, cfg, dims, x, _positions(tokens),
+                               causal=True, enc_mem=enc_mem, remat="none",
+                               ssm_chunk=ssm_chunk, act_spec=act_spec,
+                               collect_cache=True, attn_chunk=attn_chunk)
+    x = rmsnorm(wp["final_norm"], x[:, -1:], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", x, wp["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", x, wp["lm_head"])
+    b, s = tokens.shape
+    cache = Cache(groups=tuple(caches),
+                  lens=jnp.full((b,), s, jnp.int32))
+    return lg.astype(jnp.float32), cache
+
+
+def decode_step(params, cfg: ArchConfig, dims: Dims, token, cache: Cache, *,
+                compute_dtype=jnp.bfloat16, act_spec=None):
+    """One token for every sequence.  token (B, 1) int32 -> (logits, Cache)."""
+    wp = _cast(params, compute_dtype)
+    x = embed(wp["embed"], token)
+    new_groups = []
+    for (pspec, count), gparams, gcache in zip(layer_groups(cfg),
+                                               wp["groups"], cache.groups):
+
+        def body(carry, slices, _pspec=pspec):
+            x, = carry
+            pslice, cslice = slices
+            new_c = []
+            for i, spec in enumerate(_pspec):
+                x, nc, _ = blocks.decode_layer(pslice[i], x, dims, spec,
+                                               cslice[i], cache.lens, aux=None)
+                new_c.append(nc)
+            return (x,), tuple(new_c)
+
+        (x,), new_cache = jax.lax.scan(body, (x,), (gparams, gcache))
+        new_groups.append(new_cache)
+    x = rmsnorm(wp["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", x, wp["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", x, wp["lm_head"])
+    return (lg.astype(jnp.float32),
+            Cache(groups=tuple(new_groups), lens=cache.lens + 1))

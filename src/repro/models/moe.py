@@ -1,0 +1,101 @@
+"""Mixture-of-Experts with GShard/Switch-style capacity dispatch.
+
+Dispatch is the einsum formulation (one-hot dispatch/combine tensors over
+token groups) -- the form XLA's SPMD partitioner understands natively: with
+experts sharded over the `model` mesh axis and tokens over `data`, the
+dispatch einsum lowers to the canonical all-to-all pair.  Group size is
+fixed (GROUP = 1024 tokens) so the dispatch-tensor footprint stays
+O(T * k * cf * d / E) regardless of batch (DESIGN.md §6).
+
+Supports shared experts (DeepSeek-MoE: always-on experts added to the
+routed output) and exposes the load-balancing + router-z auxiliary losses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import P, dense_init
+
+GROUP = 1024
+
+
+def init_moe(key, d: int, ff: int, num_experts: int, num_shared: int) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, num_experts), ("embed", "experts"),
+                             scale=0.02),
+        "w_gate": dense_init(ks[1], (num_experts, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_up": dense_init(ks[2], (num_experts, d, ff), ("experts", "embed", "expert_mlp")),
+        "w_down": dense_init(ks[3], (num_experts, ff, d), ("experts", "expert_mlp", "embed_out")),
+    }
+    if num_shared:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, ff * num_shared)
+    return p
+
+
+def _dispatch_tensors(router_probs, top_k: int, capacity: int):
+    """router_probs: (G, S, E) -> dispatch (G,S,E,C) bool-ish, combine f32.
+
+    Sequential-choice position assignment (Switch Transformer): the k-th
+    choice of every token is placed after all (k-1)-th choices so earlier
+    choices win capacity.
+    """
+    g, s, e = router_probs.shape
+    gates, idx = jax.lax.top_k(router_probs, top_k)              # (G,S,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((g, s, e, capacity), router_probs.dtype)
+    combine = jnp.zeros((g, s, e, capacity), router_probs.dtype)
+    # expert fill counts carried across the K sequential choices
+    fill = jnp.zeros((g, e), jnp.int32)
+    for k in range(top_k):
+        onehot = jax.nn.one_hot(idx[:, :, k], e, dtype=jnp.int32)     # (G,S,E)
+        # position of each token within its expert for this choice
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]
+        pos = (pos_in_e * onehot).sum(-1)                             # (G,S)
+        keep = pos < capacity
+        pos_c = jnp.clip(pos, 0, capacity - 1)
+        oh_cap = jax.nn.one_hot(pos_c, capacity, dtype=router_probs.dtype)
+        sel = (onehot.astype(router_probs.dtype) * keep[..., None].astype(router_probs.dtype))
+        dispatch = dispatch + sel[..., None] * oh_cap[:, :, None, :]
+        combine = combine + (sel * gates[:, :, k:k + 1])[..., None] * oh_cap[:, :, None, :]
+        fill = fill + onehot.sum(axis=1)
+    return dispatch, combine, gates, idx
+
+
+def moe_ffn(params, x, *, num_experts: int, top_k: int,
+            capacity_factor: float, group: int = GROUP):
+    """x: (B, S, d) -> (out (B, S, d), aux losses dict)."""
+    b, s, d = x.shape
+    t = b * s
+    group = min(group, t)
+    assert t % group == 0, (t, group)
+    g = t // group
+    xt = x.reshape(g, group, d)
+
+    router_logits = jnp.einsum("gsd,de->gse", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    capacity = int(np.ceil(group * top_k * capacity_factor / num_experts))
+    capacity = max(capacity, top_k)
+    dispatch, combine, gates, idx = _dispatch_tensors(probs, top_k, capacity)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xt)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), expert_out)
+    out = out.reshape(b, s, d)
+
+    if "shared" in params:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x)
+
+    # aux: load-balance (Switch eq. 4-6) + router z-loss
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    one = jax.nn.one_hot(idx[..., 0], num_experts).mean(axis=(0, 1))
+    lb_loss = num_experts * jnp.sum(me * one)
+    z_loss = jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2)
+    return out, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}

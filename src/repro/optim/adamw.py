@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state is a pytree mirroring params; moments are fp32.  The
+optimizer is expressed as an (init, update) pair so train_step can swap in
+Q8Adam (int8 moments) without structural changes.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable        # params -> opt_state
+    update: Callable      # (grads, opt_state, params) -> (new_params, new_state, stats)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def make_adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+               weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    """lr_fn: step (int32 array) -> learning rate scalar."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        ml = treedef.flatten_up_to(state.m)
+        vl = treedef.flatten_up_to(state.v)
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(leaves, gl, ml, vl):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if p.ndim > 1:                       # no decay on norms/biases
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p.append((p - lr * delta).astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+        return (treedef.unflatten(new_p),
+                AdamWState(step, treedef.unflatten(new_m),
+                           treedef.unflatten(new_v)),
+                {"grad_norm": gnorm, "lr": lr})
+
+    return Optimizer(init=init, update=update)

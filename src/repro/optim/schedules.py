@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.full((), lr, jnp.float32)
+    return fn

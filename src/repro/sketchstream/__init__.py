@@ -1,0 +1,2 @@
+from .monitor import (SketchMonitorConfig, init_monitor, monitor_update_local,
+                      merge_monitor, monitor_estimate, contamination_estimate)

@@ -1,0 +1,105 @@
+"""SJPC as a first-class training-pipeline feature: the stream monitor.
+
+The monitor rides inside ``train_step``: every batch's sequences are reduced
+to d-column super-shingle records (data.recordize) and absorbed into
+device-LOCAL Fast-AGMS sketches.  Because sketches are linear, the merge
+across data-parallel workers is a plain sum that can be DEFERRED -- counters
+live as a (shards, levels, t, w) array sharded over the data axes, no
+per-step collective (DESIGN.md §7.1, the deferred-merge optimization).  The
+paper-faithful alternative (psum every step) is available for comparison
+(``merge_every_step=True``) and is measured in EXPERIMENTS.md §Perf.
+
+Query at any step (the paper's continuous queries): pull counters, sum the
+shard axis on host, run the Eq. 4 inversion -> g_s for every s in [s_min, d].
+
+Two-stream mode (``contamination_estimate``): sketch train and eval corpora
+with the SAME hash params; the §6 join estimator (Eq. 7, sketch inner
+products) gives the train<->eval near-duplicate count -- a contamination
+signal no single-stream dedup provides.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCParams, SJPCState
+from repro.data.recordize import records_from_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchMonitorConfig:
+    d: int = 6                 # super-shingle columns per sequence
+    s: int = 3                 # minimum similarity threshold monitored
+    ratio: float = 0.5
+    width: int = 1024
+    depth: int = 3
+    shards: int = 1            # data-parallel shard count (leading axis)
+    merge_every_step: bool = False
+    seed: int = 0xD5
+
+    @property
+    def sjpc(self) -> SJPCConfig:
+        return SJPCConfig(d=self.d, s=self.s, ratio=self.ratio,
+                          width=self.width, depth=self.depth, seed=self.seed)
+
+
+class MonitorState(NamedTuple):
+    counters: jax.Array        # (shards, levels, t, w) int32
+    n: jax.Array               # (shards,) float32 records seen per shard
+    step: jax.Array            # () int32
+
+
+def init_monitor(cfg: SketchMonitorConfig) -> tuple[SJPCParams, MonitorState]:
+    params, st = sjpc.init(cfg.sjpc)
+    counters = jnp.zeros((cfg.shards,) + st.counters.shape, jnp.int32)
+    return params, MonitorState(counters=counters,
+                                n=jnp.zeros((cfg.shards,), jnp.float32),
+                                step=jnp.zeros((), jnp.int32))
+
+
+def monitor_update_local(cfg: SketchMonitorConfig, params: SJPCParams,
+                         local_counters, local_n, tokens, step):
+    """Shard-local update (call inside shard_map, or directly when shards=1).
+
+    local_counters: (levels, t, w); tokens: this shard's (b, S) slice.
+    """
+    records = records_from_tokens(tokens, cfg.d)
+    st = SJPCState(counters=local_counters, n=local_n, step=step)
+    st = sjpc.update(cfg.sjpc, params, st, records)
+    return st.counters, st.n
+
+
+def merge_monitor(state: MonitorState) -> SJPCState:
+    """Deferred merge: sum the shard axis (linearity)."""
+    return SJPCState(counters=state.counters.sum(axis=0),
+                     n=state.n.sum(), step=state.step)
+
+
+def monitor_estimate(cfg: SketchMonitorConfig, state: MonitorState):
+    """Continuous query: g_s for every monitored threshold s..d."""
+    merged = merge_monitor(state)
+    est = sjpc.estimate(cfg.sjpc, merged)
+    return {
+        "n": est.n,
+        "per_level_pairs": est.x,           # X_k for k = s..d
+        "g": {k: float(est.x[k - cfg.s:].sum() + est.n)
+              for k in range(cfg.s, cfg.d + 1)},
+    }
+
+
+def contamination_estimate(cfg: SketchMonitorConfig, train_state: MonitorState,
+                           eval_state: MonitorState):
+    """Train<->eval similarity JOIN size (paper §6; Eq. 7 inversion)."""
+    a = merge_monitor(train_state)
+    b = merge_monitor(eval_state)
+    est = sjpc.estimate_join(cfg.sjpc, a, b)
+    return {
+        "per_level_pairs": est.x,
+        "join": {k: float(est.x[k - cfg.s:].sum())
+                 for k in range(cfg.s, cfg.d + 1)},
+    }

@@ -1,0 +1,66 @@
+"""Baselines (§2): sanity + the Lemma-1 separation SJPC is compared against."""
+import numpy as np
+import pytest
+
+from repro.core import baselines, exact
+
+
+def _dups_dataset(rng, n=400, d=5, dup_frac=0.5):
+    base = rng.integers(0, 50, size=(n, d)).astype(np.uint32)
+    n_dup = int(n * dup_frac) // 2
+    for i in range(n_dup):
+        base[n - 1 - i] = base[i]
+        base[n - 1 - i, rng.integers(0, d)] += 1000   # 4-similar partner
+    return base
+
+
+class TestRandomSampling:
+    def test_full_sample_is_exact(self):
+        rng = np.random.default_rng(0)
+        vals = _dups_dataset(rng)
+        x_est = baselines.random_sampling_pair_counts(vals, len(vals), rng)
+        np.testing.assert_allclose(x_est, exact.brute_force_pair_counts(vals))
+
+    def test_unbiased_at_half_sample(self):
+        rng = np.random.default_rng(1)
+        vals = _dups_dataset(rng)
+        true_g = exact.exact_g(vals, 4)
+        ests = [baselines.random_sampling_g(vals, 4, 200, np.random.default_rng(s))
+                for s in range(40)]
+        assert abs(np.mean(ests) - true_g) / true_g < 0.2
+
+    def test_small_sample_misses_similar_pairs(self):
+        """Lemma 1: o(sqrt(n)) samples typically see zero similar pairs and
+        estimate g_s ~= n."""
+        rng = np.random.default_rng(2)
+        n = 2000
+        vals = rng.integers(0, 2**30, size=(n, 5)).astype(np.uint32)
+        vals[1] = vals[0]                          # one duplicate pair only
+        misses = 0
+        for s in range(20):
+            g = baselines.random_sampling_g(vals, 5, 8, np.random.default_rng(s))
+            misses += (g == n)
+        assert misses >= 18
+
+
+class TestLSHSS:
+    def test_reasonable_estimate_on_dups(self):
+        rng = np.random.default_rng(3)
+        vals = _dups_dataset(rng, n=300)
+        true_g = exact.exact_g(vals, 4)
+        ests = [baselines.lsh_ss_g(vals, 4, np.random.default_rng(100 + s))
+                for s in range(10)]
+        # LSH-SS is the weaker baseline in the paper; allow generous error
+        assert abs(np.median(ests) - true_g) / true_g < 1.0
+
+    def test_no_duplicates_estimates_near_n(self):
+        rng = np.random.default_rng(4)
+        vals = rng.integers(0, 2**30, size=(500, 5)).astype(np.uint32)
+        g = baselines.lsh_ss_g(vals, 4, rng)
+        assert abs(g - 500) / 500 < 0.5
+
+
+class TestSpaceAccounting:
+    def test_sample_size_for_bytes(self):
+        # Fig. 8 setting: 48,000 bytes, 48-byte records -> 1000 records
+        assert baselines.sample_size_for_bytes(48_000, 48) == 1000

@@ -1,0 +1,44 @@
+"""Synthetic generators: the planted similarity structure must be real
+(checked against the exact oracles at small n)."""
+import numpy as np
+
+from repro.core import exact
+from repro.data.synthetic import (dblp_like, shingle_records,
+                                  near_uniform_40_60, skewed, yfcc_like)
+
+
+def test_dblp_like_has_planted_near_dups():
+    recs = dblp_like(400, d=5, seed=1, dup_fraction=0.1)
+    x = exact.exact_pair_counts(recs)
+    # 40 planted (d-1)-similar pairs (x2 ordered) + column-collision noise
+    assert x[4] + x[5] >= 60, x
+
+
+def test_shingle_groups_quadratic():
+    recs = shingle_records(600, d=6, seed=2, group=5,
+                           dup_profile=((6, 0.1),))
+    x = exact.exact_pair_counts(recs)
+    # ~60/4 = 15 groups of 5 -> >= 15 * 5*4 = 300 ordered 6-similar pairs
+    assert x[6] >= 250, x
+
+
+def test_near_uniform_structure():
+    recs = near_uniform_40_60(500, seed=3)
+    x = exact.exact_pair_counts(recs)
+    pairs_4 = x[4] / 2
+    assert 120 <= pairs_4 <= 160, x          # 30% of n pairs (60% of rows)
+
+
+def test_skewed_structure():
+    recs = skewed(512, frac_unique=0.2, group=16, seed=4)
+    g4 = exact.exact_g(recs, 4) - 512
+    # ~25 groups of 16 -> 16*15*25 = 6000 ordered pairs >= 4-similar
+    assert g4 > 3000, g4
+
+
+def test_yfcc_like_shape_and_skew():
+    recs = yfcc_like(2000, seed=5)
+    assert recs.shape == (2000, 5)
+    # userid column is zipf-skewed: top user owns many rows
+    _, counts = np.unique(recs[:, 0], return_counts=True)
+    assert counts.max() > 20

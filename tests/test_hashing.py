@@ -1,0 +1,105 @@
+"""Unit + property tests for the uint32 Mersenne-31 field arithmetic."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+
+P = int(H.P31)
+
+
+def _np_u32(xs):
+    return np.asarray(xs, dtype=np.uint32)
+
+
+class TestFieldOps:
+    def test_mulmod_matches_uint64_oracle_random(self):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, P, size=100_000, dtype=np.uint32)
+        b = rng.integers(0, P, size=100_000, dtype=np.uint32)
+        got = np.asarray(H.mulmod_p31(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(got, H.np_mulmod_p31(a, b))
+
+    def test_mulmod_adversarial_boundaries(self):
+        edge = _np_u32([0, 1, 2, 3, P - 1, P - 2, P // 2, P // 2 + 1,
+                        (1 << 16) - 1, 1 << 16, (1 << 16) + 1,
+                        (1 << 30) - 1, 1 << 30, (1 << 30) + 1])
+        a, b = np.meshgrid(edge, edge)
+        a, b = a.ravel(), b.ravel()
+        got = np.asarray(H.mulmod_p31(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(got, H.np_mulmod_p31(a, b))
+
+    def test_reduce_full_uint32_range(self):
+        rng = np.random.default_rng(1)
+        x = np.concatenate([
+            rng.integers(0, 2**32, size=100_000, dtype=np.uint32),
+            _np_u32([0, P - 1, P, P + 1, 2**32 - 1, 2**31, 2**31 - 1]),
+        ])
+        got = np.asarray(H.reduce_p31(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, (x.astype(np.uint64) % P).astype(np.uint32))
+
+    @given(st.integers(0, P - 1), st.integers(0, P - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_mulmod_property(self, a, b):
+        got = int(H.mulmod_p31(jnp.uint32(a), jnp.uint32(b)))
+        assert got == (a * b) % P
+
+    @given(st.integers(0, P - 1), st.integers(0, P - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_addmod_property(self, a, b):
+        got = int(H.addmod_p31(jnp.uint32(a), jnp.uint32(b)))
+        assert got == (a + b) % P
+
+
+class TestCWHash:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(2)
+        coeffs = H.random_field_elements(rng, (5, 4))
+        keys = rng.integers(0, P, size=2_000, dtype=np.uint32)
+        got = np.asarray(H.cw_hash(jnp.asarray(keys)[:, None], jnp.asarray(coeffs)[None]))
+        np.testing.assert_array_equal(got, H.np_cw_hash(keys[:, None], coeffs[None]))
+
+    def test_pairwise_independence_statistics(self):
+        """Chi-square-ish sanity: buckets near uniform, signs near zero-mean."""
+        rng = np.random.default_rng(3)
+        coeffs = H.random_field_elements(rng, (4,))
+        keys = np.arange(1, 200_001, dtype=np.uint32)   # worst case: sequential keys
+        h = np.asarray(H.cw_hash(jnp.asarray(keys), jnp.asarray(coeffs)))
+        w = 256
+        counts = np.bincount(np.asarray(H.hash_bucket(jnp.asarray(h), w)), minlength=w)
+        expected = len(keys) / w
+        chi2 = ((counts - expected) ** 2 / expected).sum()
+        # chi2 d.o.f. 255: mean 255, std ~22.6; allow 6 sigma
+        assert chi2 < 255 + 6 * 23, chi2
+        signs = np.asarray(H.hash_sign(jnp.asarray(h)))
+        assert abs(signs.mean()) < 0.01
+
+    def test_four_wise_sign_products(self):
+        """E[s(a)s(b)s(c)s(d)] ~ 0 for distinct keys -- the moment the AGMS
+        variance proof needs from 4-universality."""
+        rng = np.random.default_rng(4)
+        prods = []
+        keys = rng.choice(P, size=4, replace=False).astype(np.uint32)
+        for trial in range(4000):
+            coeffs = H.random_field_elements(rng, (4,))
+            s = np.asarray(H.hash_sign(H.cw_hash(jnp.asarray(keys), jnp.asarray(coeffs))))
+            prods.append(np.prod(s))
+        m = np.mean(prods)
+        assert abs(m) < 5 / np.sqrt(len(prods)), m   # 5 sigma
+
+    def test_pair_hash_distinct_components(self):
+        rng = np.random.default_rng(5)
+        coeffs = jnp.asarray(H.random_field_elements(rng, (2, 4)))
+        x = jnp.asarray(rng.integers(0, P, size=100, dtype=np.uint32))
+        y = jnp.asarray(rng.integers(0, P, size=100, dtype=np.uint32))
+        h_xy = np.asarray(H.cw_hash_pair(x, y, coeffs))
+        h_yx = np.asarray(H.cw_hash_pair(y, x, coeffs))
+        assert (h_xy != h_yx).any()   # order matters (components independent)
+
+    def test_canonical_range(self):
+        rng = np.random.default_rng(6)
+        coeffs = jnp.asarray(H.random_field_elements(rng, (4,)))
+        x = jnp.asarray(rng.integers(0, 2**32, size=10_000, dtype=np.uint32))
+        h = np.asarray(H.cw_hash(H.reduce_p31(x), coeffs))
+        assert (h < P).all()

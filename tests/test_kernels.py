@@ -1,0 +1,139 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes, block sizes, and weight patterns."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sketch as sk
+from repro.core.hashing import P31
+from repro.core.fingerprint import make_fingerprint_bases, np_subvalue_fingerprints
+from repro.core.projections import level_combinations
+from repro.kernels import ref
+from repro.kernels.fingerprint import fingerprint_pallas
+from repro.kernels.sketch_update import sketch_update_pallas
+from repro.kernels.sketch_moments import sketch_moments_pallas
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(2024)
+
+
+class TestFingerprintKernel:
+    @pytest.mark.parametrize("d,k", [(3, 2), (6, 3), (6, 6), (8, 5), (10, 8), (12, 11)])
+    @pytest.mark.parametrize("batch", [1, 17, 256])
+    def test_matches_ref_and_numpy_oracle(self, rng, d, k, batch):
+        lv = level_combinations(d, k)
+        vals = rng.integers(0, 2**32, size=(batch, d), dtype=np.uint32)
+        bases = make_fingerprint_bases(rng)
+        f1p, f2p = fingerprint_pallas(jnp.asarray(vals), jnp.asarray(lv.masks),
+                                      jnp.asarray(lv.ids), jnp.asarray(bases),
+                                      interpret=True)
+        f1r, f2r = ref.fingerprint_ref(jnp.asarray(vals), jnp.asarray(lv.masks),
+                                       jnp.asarray(lv.ids), jnp.asarray(bases))
+        np.testing.assert_array_equal(np.asarray(f1p), np.asarray(f1r))
+        np.testing.assert_array_equal(np.asarray(f2p), np.asarray(f2r))
+        f1n, f2n = np_subvalue_fingerprints(vals, lv.masks, lv.ids, bases)
+        np.testing.assert_array_equal(np.asarray(f1p), f1n)
+        np.testing.assert_array_equal(np.asarray(f2p), f2n)
+
+    @pytest.mark.parametrize("block_b,block_m", [(8, 128), (64, 256), (512, 512)])
+    def test_block_shape_invariance(self, rng, block_b, block_m):
+        lv = level_combinations(7, 4)
+        vals = rng.integers(0, 2**32, size=(50, 7), dtype=np.uint32)
+        bases = jnp.asarray(make_fingerprint_bases(rng))
+        f1a, f2a = fingerprint_pallas(jnp.asarray(vals), jnp.asarray(lv.masks),
+                                      jnp.asarray(lv.ids), bases,
+                                      block_b=block_b, block_m=block_m,
+                                      interpret=True)
+        f1r, f2r = ref.fingerprint_ref(jnp.asarray(vals), jnp.asarray(lv.masks),
+                                       jnp.asarray(lv.ids), bases)
+        np.testing.assert_array_equal(np.asarray(f1a), np.asarray(f1r))
+        np.testing.assert_array_equal(np.asarray(f2a), np.asarray(f2r))
+
+    def test_distinct_combos_distinct_fps(self, rng):
+        """Identical values under different combinations must not collide
+        (the paper's projection-tagging requirement)."""
+        lv = level_combinations(4, 2)
+        vals = np.zeros((1, 4), dtype=np.uint32)      # all-equal columns
+        bases = jnp.asarray(make_fingerprint_bases(rng))
+        f1, _ = fingerprint_pallas(jnp.asarray(vals), jnp.asarray(lv.masks),
+                                   jnp.asarray(lv.ids), bases, interpret=True)
+        f1 = np.asarray(f1)[0]
+        assert len(np.unique(f1)) == lv.num
+
+
+class TestSketchUpdateKernel:
+    @pytest.mark.parametrize("n", [1, 100, 1024, 4097])
+    @pytest.mark.parametrize("t,w", [(1, 256), (3, 1024), (5, 4096)])
+    def test_matches_scatter_ref(self, rng, n, t, w):
+        params = sk.make_sketch_params(rng, t)
+        k1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        k2 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        wt = jnp.asarray(rng.integers(0, 2, size=n).astype(np.int32))
+        c0 = jnp.asarray(rng.integers(-7, 7, size=(t, w)).astype(np.int32))
+        got = sketch_update_pallas(c0, k1, k2, params.bucket_coeffs,
+                                   params.sign_coeffs, wt, interpret=True)
+        want = ref.sketch_update_ref(c0, k1, k2, params.bucket_coeffs,
+                                     params.sign_coeffs, wt)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("block_n,block_w", [(128, 256), (512, 1024), (2048, 512)])
+    def test_block_shape_invariance(self, rng, block_n, block_w):
+        params = sk.make_sketch_params(rng, 3)
+        n, w = 777, 1024
+        k1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        k2 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        wt = jnp.ones((n,), jnp.int32)
+        c0 = sk.empty_counters(3, w)
+        got = sketch_update_pallas(c0, k1, k2, params.bucket_coeffs,
+                                   params.sign_coeffs, wt,
+                                   block_n=block_n, block_w=block_w,
+                                   interpret=True)
+        want = ref.sketch_update_ref(c0, k1, k2, params.bucket_coeffs,
+                                     params.sign_coeffs, wt)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_repeated_heavy_key_exact(self, rng):
+        """A single heavy key must accumulate exactly (float32 one-hot matmul
+        stays integral)."""
+        params = sk.make_sketch_params(rng, 3)
+        n, w = 2048, 512
+        k1 = jnp.full((n,), jnp.uint32(12345))
+        k2 = jnp.full((n,), jnp.uint32(67890))
+        wt = jnp.ones((n,), jnp.int32)
+        got = sketch_update_pallas(sk.empty_counters(3, w), k1, k2,
+                                   params.bucket_coeffs, params.sign_coeffs,
+                                   wt, interpret=True)
+        got = np.asarray(got)
+        assert (np.abs(got).sum(axis=1) == n).all()
+        assert (np.abs(got).max(axis=1) == n).all()
+
+
+class TestSketchMomentsKernel:
+    @pytest.mark.parametrize("t,w,bw", [(1, 512, 512), (3, 4096, 1024), (7, 2048, 2048)])
+    def test_matches_ref(self, rng, t, w, bw):
+        a = jnp.asarray(rng.integers(-100, 100, size=(t, w)).astype(np.int32))
+        b = jnp.asarray(rng.integers(-100, 100, size=(t, w)).astype(np.int32))
+        got = sketch_moments_pallas(a, b, block_w=bw, interpret=True)
+        want = ref.sketch_moments_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestEndToEndKernelPath:
+    def test_sjpc_update_with_kernels_matches_reference(self, rng):
+        """Full SJPC batch update via Pallas kernels == reference jnp path."""
+        import jax
+        from repro.core import sjpc
+        from repro.kernels import ops
+        vals = rng.integers(0, 6, size=(64, 5)).astype(np.uint32)
+        cfg = sjpc.SJPCConfig(d=5, s=3, ratio=0.5, width=512, depth=3, seed=1)
+        params, s_ref = sjpc.init(cfg)
+        key = jax.random.PRNGKey(99)
+        s_k = sjpc.SJPCState(s_ref.counters, s_ref.n, s_ref.step)
+        out_ref = sjpc.update(cfg, params, s_ref, jnp.asarray(vals), key=key)
+        out_k = sjpc.update(cfg, params, s_k, jnp.asarray(vals), key=key,
+                            update_fn=ops.make_sjpc_update_fn(use_pallas=True,
+                                                              interpret=True))
+        np.testing.assert_array_equal(np.asarray(out_ref.counters),
+                                      np.asarray(out_k.counters))

@@ -1,0 +1,125 @@
+"""Optimizer tests: AdamW trajectory, Q8Adam-vs-AdamW closeness, quantizer
+round-trip properties, gradient compression error feedback."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import make_adamw, global_norm
+from repro.optim.q8adam import make_q8adam, quantize, dequantize
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+def _quadratic_problem(dim=64, seed=0):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(dim, dim)).astype(np.float32))
+    params = {"w": jnp.zeros((dim, dim), jnp.float32),
+              "b": jnp.zeros((dim,), jnp.float32)}
+
+    def loss_fn(p):
+        return jnp.mean((p["w"] - target) ** 2) + jnp.mean(p["b"] ** 2)
+    return params, loss_fn
+
+
+def _run(optimizer, params, loss_fn, steps):
+    state = optimizer.init(params)
+    losses = []
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    upd = jax.jit(optimizer.update)
+    for _ in range(steps):
+        loss, g = grad_fn(params)
+        params, state, _ = upd(g, state, params)
+        losses.append(float(loss))
+    return params, losses
+
+
+def test_adamw_converges_quadratic():
+    params, loss_fn = _quadratic_problem()
+    _, losses = _run(make_adamw(constant(0.05), weight_decay=0.0), params,
+                     loss_fn, 200)
+    assert losses[-1] < 0.01 * losses[0], losses[-1]
+
+
+def test_q8adam_tracks_adamw():
+    params, loss_fn = _quadratic_problem()
+    _, l32 = _run(make_adamw(constant(0.05), weight_decay=0.0), params, loss_fn, 150)
+    _, l8 = _run(make_q8adam(constant(0.05), weight_decay=0.0), params, loss_fn, 150)
+    # int8 moments shouldn't derail the trajectory
+    assert l8[-1] < 0.05 * l8[0]
+    assert abs(l8[-1] - l32[-1]) < 0.1 * (l32[0] - l32[-1])
+
+
+class TestQuantizer:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+    @settings(max_examples=30, deadline=None)
+    def test_round_trip_error_bound(self, seed, n):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32) * 10)
+        qt = quantize(x)
+        back = dequantize(qt, x.shape)
+        # per-block abs-max scaling: error <= scale/2 <= max|block|/254
+        err = np.abs(np.asarray(back - x))
+        blocks = np.abs(np.asarray(x))
+        assert err.max() <= blocks.max() / 127 + 1e-6
+
+    def test_stochastic_rounding_unbiased(self):
+        x = jnp.full((4096,), 0.3 * 0.011, jnp.float32)  # mid-bucket value
+        x = x.at[0].set(1.4)                             # sets the scale
+        samples = []
+        for i in range(400):
+            qt = quantize(x, key=jax.random.PRNGKey(i))
+            samples.append(float(dequantize(qt, x.shape)[1]))
+        # std of the mean ~ 0.011*sqrt(0.21)/20 ~ 2.5e-4; allow 4 sigma
+        assert abs(np.mean(samples) - 0.0033) < 1e-3
+
+    def test_zero_is_exact(self):
+        qt = quantize(jnp.zeros((1000,), jnp.float32))
+        assert float(jnp.abs(dequantize(qt, (1000,))).max()) == 0.0
+
+
+class TestCompression:
+    def test_round_trip(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(333, 17)).astype(np.float32))
+        codes, scales = compress_int8(x)
+        back = decompress_int8(codes, scales, x.shape)
+        assert float(jnp.abs(back - x).max()) <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+    def test_error_feedback_reduces_bias(self):
+        """With error feedback the long-run mean of compressed grads is the
+        true gradient (the residual never disappears from the stream)."""
+        rng = np.random.default_rng(6)
+        g_true = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+        err = jnp.zeros_like(g_true)
+        acc_fb = jnp.zeros_like(g_true)
+        acc_nofb = jnp.zeros_like(g_true)
+        steps = 100
+        for _ in range(steps):
+            codes, scales = compress_int8(g_true + err)
+            sent = decompress_int8(codes, scales, g_true.shape)
+            err = (g_true + err) - sent
+            acc_fb += sent
+            c2, s2 = compress_int8(g_true)
+            acc_nofb += decompress_int8(c2, s2, g_true.shape)
+        bias_fb = float(jnp.abs(acc_fb / steps - g_true).max())
+        bias_nofb = float(jnp.abs(acc_nofb / steps - g_true).max())
+        assert bias_fb <= bias_nofb + 1e-6
+        assert bias_fb < 0.005
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1e-3, 100, 1000)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert abs(float(fn(jnp.asarray(100))) - 1e-3) < 1e-9
+    assert float(fn(jnp.asarray(1000))) == pytest.approx(1e-4, rel=1e-3)
+    assert float(fn(jnp.asarray(50))) == pytest.approx(5e-4, rel=1e-3)
+
+
+def test_global_norm_clip():
+    from repro.optim.adamw import clip_by_global_norm
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(250), rel=1e-6)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)

@@ -1,0 +1,208 @@
+"""SJPC end-to-end: exactness of the inversion, unbiasedness with sampling
+and sketching, the paper's Table-1 example, join estimation, variance bounds.
+
+These are the system's behavioural invariants; hypothesis drives the
+property tests over random small tables where the O(n^2) oracle is cheap.
+"""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exact, sjpc
+from repro.core.projections import sample_combo_weights, lattice
+
+
+def _run_sjpc(vals, cfg, batch=None):
+    params, state = sjpc.init(cfg)
+    upd = jax.jit(lambda st, v: sjpc.update(cfg, params, st, v))
+    batch = batch or len(vals)
+    for i in range(0, len(vals), batch):
+        chunk = vals[i:i + batch]
+        if len(chunk) < batch:   # static shapes: pad the tail via two calls
+            upd2 = jax.jit(lambda st, v: sjpc.update(cfg, params, st, v))
+            state = upd2(state, jnp.asarray(chunk))
+        else:
+            state = upd(state, jnp.asarray(chunk))
+    return state
+
+
+class TestPaperExample:
+    def test_table_1(self):
+        """The running example: 4 rows, 3 cols, exactly 4 ordered 2-similar
+        pairs and no 3-similar pairs (paper Table 1 / §3)."""
+        tbl = np.array([[1, 10, 100],
+                        [2, 20, 200],
+                        [1, 10, 300],
+                        [3, 20, 200]], dtype=np.uint32)
+        x = exact.exact_pair_counts(tbl)
+        assert x[3] == 0 and x[2] == 4 and x[1] == 0
+        # g_2 = 4 + n = 8 ; the self-join sizes of Table 2: level 2 = 16
+        y = exact.exact_level_join_sizes(tbl)
+        assert y[2] == 16 and y[3] == 4
+        assert exact.exact_g(tbl, 2) == 8.0
+
+
+class TestExactOracles:
+    @given(st.integers(0, 10_000), st.integers(2, 40), st.integers(2, 5),
+           st.integers(2, 4))
+    @settings(max_examples=40, deadline=None)
+    def test_lattice_inversion_equals_brute_force(self, seed, n, d, card):
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(0, card, size=(n, d)).astype(np.uint32)
+        np.testing.assert_allclose(exact.exact_pair_counts(vals),
+                                   exact.brute_force_pair_counts(vals))
+
+
+class TestOfflineExactness:
+    """r=1 and exact (numpy int64) F2 => the inversion is *exact* (Lemma 3)."""
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_r1_widesketch_close(self, seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(0, 4, size=(60, 4)).astype(np.uint32)
+        cfg = sjpc.SJPCConfig(d=4, s=2, ratio=1.0, width=8192, depth=5,
+                              seed=seed ^ 0xABC)
+        state = _run_sjpc(vals, cfg)
+        est = sjpc.estimate(cfg, state)
+        true_g = exact.exact_g(vals, 2)
+        # tiny stream + wide sketch: collisions are rare; near-exact
+        assert abs(est.g_s - true_g) / true_g < 0.05
+
+    def test_inversion_is_exact_given_exact_y(self):
+        rng = np.random.default_rng(123)
+        vals = rng.integers(0, 5, size=(300, 5)).astype(np.uint32)
+        y = exact.exact_level_join_sizes(vals)          # r = 1 exact Y_k
+        x_true = exact.exact_pair_counts(vals)
+        for s in range(1, 6):
+            x = sjpc.f2_to_pair_count(5, s, 300, 1.0, y[s:], clamp=False)
+            np.testing.assert_allclose(x, x_true[s:], rtol=1e-12)
+
+
+class TestUnbiasedness:
+    def test_sampled_estimator_unbiased(self):
+        """Eq. 4 inversion with r<1: mean over seeds within a few percent
+        (would be ~+25% biased under the Algorithm-1 line-34 erratum)."""
+        rng = np.random.default_rng(42)
+        vals = rng.integers(0, 6, size=(400, 5)).astype(np.uint32)
+        true_g = exact.exact_g(vals, 3)
+        ests = []
+        for seed in range(12):
+            cfg = sjpc.SJPCConfig(d=5, s=3, ratio=0.5, width=4096, depth=5,
+                                  seed=seed)
+            est = sjpc.estimate(cfg, _run_sjpc(vals, cfg))
+            ests.append(est.g_s)
+        rel_bias = abs(np.mean(ests) - true_g) / true_g
+        assert rel_bias < 0.08, (np.mean(ests), true_g)
+
+    def test_error_within_theorem1_bound(self):
+        rng = np.random.default_rng(7)
+        vals = rng.integers(0, 6, size=(400, 5)).astype(np.uint32)
+        true_g = exact.exact_g(vals, 3)
+        bound_std = math.sqrt(sjpc.offline_variance_bound(5, 3, 0.5, true_g))
+        ests = []
+        for seed in range(12):
+            cfg = sjpc.SJPCConfig(d=5, s=3, ratio=0.5, width=8192, depth=5,
+                                  seed=1000 + seed)
+            ests.append(sjpc.estimate(cfg, _run_sjpc(vals, cfg)).g_s)
+        rel_std = np.std(ests) / true_g
+        assert rel_std < bound_std, (rel_std, bound_std)
+
+
+class TestStreamingInvariants:
+    def test_batch_split_invariance(self):
+        """One-pass semantics: the sketch state is identical however the
+        stream is batched (given the same per-batch RNG stream)."""
+        rng = np.random.default_rng(3)
+        vals = rng.integers(0, 5, size=(128, 4)).astype(np.uint32)
+        cfg = sjpc.SJPCConfig(d=4, s=2, ratio=1.0, width=512, depth=3, seed=5)
+        params, s_all = sjpc.init(cfg)
+        s_all = sjpc.update(cfg, params, s_all, jnp.asarray(vals))
+        _, s_split = sjpc.init(cfg)
+        # ratio=1 -> no sampling randomness -> merging must be exact
+        s_a = sjpc.update(cfg, params, sjpc.init(cfg)[1], jnp.asarray(vals[:64]))
+        s_b = sjpc.update(cfg, params, sjpc.init(cfg)[1], jnp.asarray(vals[64:]))
+        merged = sjpc.merge(s_a, s_b)
+        np.testing.assert_array_equal(np.asarray(s_all.counters),
+                                      np.asarray(merged.counters))
+        assert float(merged.n) == 128.0
+
+    def test_counts_records(self):
+        cfg = sjpc.SJPCConfig(d=3, s=2, ratio=1.0, width=256, depth=2)
+        params, state = sjpc.init(cfg)
+        state = sjpc.update(cfg, params, state, jnp.zeros((32, 3), jnp.uint32))
+        state = sjpc.update(cfg, params, state, jnp.zeros((16, 3), jnp.uint32))
+        assert float(state.n) == 48.0
+
+
+class TestSampling:
+    @given(st.integers(0, 1000), st.floats(0.2, 1.0), st.integers(2, 30))
+    @settings(max_examples=30, deadline=None)
+    def test_sample_weights_row_counts(self, seed, ratio, m):
+        key = jax.random.PRNGKey(seed)
+        w = np.asarray(sample_combo_weights(key, 64, m, ratio))
+        assert w.shape == (64, m)
+        lo = math.floor(m * ratio + 1e-9)
+        counts = w.sum(axis=1)
+        assert ((counts == lo) | (counts == min(lo + 1, m))).all()
+
+    def test_inclusion_probability_uniform(self):
+        """Each combination is included with probability ~r (Lemma 4's
+        premise)."""
+        key = jax.random.PRNGKey(0)
+        w = np.asarray(sample_combo_weights(key, 20_000, 10, 0.35))
+        incl = w.mean(axis=0)
+        np.testing.assert_allclose(incl, 0.35, atol=0.02)
+
+    def test_lattice_levels(self):
+        lv = lattice(5, 2)
+        assert [l.k for l in lv] == [2, 3, 4, 5]
+        assert [l.num for l in lv] == [10, 10, 5, 1]
+        # ids are globally unique bitmasks
+        ids = np.concatenate([l.ids for l in lv])
+        assert len(np.unique(ids)) == len(ids)
+
+
+class TestJoinEstimation:
+    def test_join_size_two_streams(self):
+        rng = np.random.default_rng(21)
+        a = rng.integers(0, 5, size=(300, 4)).astype(np.uint32)
+        b = rng.integers(0, 5, size=(250, 4)).astype(np.uint32)
+        true_j = exact.exact_join_g(a, b, 3)
+        ests = []
+        for seed in range(8):
+            cfg = sjpc.SJPCConfig(d=4, s=3, ratio=1.0, width=4096, depth=5,
+                                  seed=seed)
+            params, sa = sjpc.init(cfg)
+            sb = sjpc.SJPCState(sa.counters, sa.n, sa.step)
+            sa = sjpc.update(cfg, params, sa, jnp.asarray(a))
+            sb = sjpc.update(cfg, params, sb, jnp.asarray(b))
+            ests.append(sjpc.estimate_join(cfg, sa, sb).g_s)
+        assert abs(np.median(ests) - true_j) / max(true_j, 1) < 0.25
+
+    def test_counterexample_selfjoin_bound_does_not_hold(self):
+        """Paper §6: |A sim-join B| can exceed (SJ(A)+SJ(B))/2 -- the
+        Alon et al. bound fails for similarity joins."""
+        a = np.array([[1, 2, 3, 4]], dtype=np.uint32)
+        b = np.array([[1, 2, 30, 40], [10, 20, 3, 4]], dtype=np.uint32)
+        join_size = exact.exact_join_g(a, b, 2)
+        sj_a = exact.exact_g(a, 2)    # 1 (self-pair only)
+        sj_b = exact.exact_g(b, 2)    # 2
+        assert join_size == 2
+        assert join_size > (sj_a + sj_b) / 2 - 1e-9
+
+
+class TestVarianceBounds:
+    def test_bounds_monotone_in_gap(self):
+        b1 = sjpc.offline_variance_bound(6, 5, 0.5, 1000)
+        b2 = sjpc.offline_variance_bound(6, 3, 0.5, 1000)
+        assert b2 > b1
+
+    def test_online_adds_sketch_term(self):
+        off = sjpc.offline_variance_bound(6, 4, 0.5, 1000)
+        on = sjpc.online_variance_bound(6, 4, 0.5, 1024, 500, 1000)
+        assert on > off

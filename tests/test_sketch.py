@@ -1,0 +1,117 @@
+"""Fast-AGMS sketch: F2/inner-product accuracy, linearity, merge semantics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch as sk
+from repro.core.hashing import P31
+
+
+_jit_update = jax.jit(sk.sketch_update)
+_jit_update_w = jax.jit(sk.sketch_update)
+
+
+def _insert_multiset(counters, params, keys1, keys2, weights=None):
+    if weights is None:
+        return _jit_update(counters, jnp.asarray(keys1), jnp.asarray(keys2), params)
+    return _jit_update_w(counters, jnp.asarray(keys1), jnp.asarray(keys2),
+                         params, jnp.asarray(weights))
+
+
+def _random_stream(rng, n_distinct, zipf=1.2, total=20_000):
+    """A skewed multiset of (fp1, fp2) keys; returns keys + true F2.
+
+    The total stream length is capped at ~``total`` (zipf tails are huge;
+    uncapped streams made this a multi-minute CPU test).
+    """
+    freqs = rng.zipf(zipf, size=n_distinct).clip(max=total // 20).astype(np.int64)
+    if freqs.sum() > total:
+        freqs = np.maximum(1, freqs * total // freqs.sum())
+    k1 = rng.integers(0, int(P31), size=n_distinct, dtype=np.uint32)
+    k2 = rng.integers(0, int(P31), size=n_distinct, dtype=np.uint32)
+    keys1 = np.repeat(k1, freqs)
+    keys2 = np.repeat(k2, freqs)
+    f2 = float((freqs ** 2).sum())
+    return keys1, keys2, f2
+
+
+class TestF2:
+    @pytest.mark.parametrize("width,depth", [(1024, 5), (4096, 3)])
+    def test_f2_relative_error(self, width, depth):
+        rng = np.random.default_rng(10)
+        keys1, keys2, f2 = _random_stream(rng, 3000)
+        errs = []
+        for seed in range(8):
+            params = sk.make_sketch_params(np.random.default_rng(seed), depth)
+            counters = sk.empty_counters(depth, width)
+            counters = _insert_multiset(counters, params, keys1, keys2)
+            est = float(sk.np_estimate_f2_exact(np.asarray(counters)))
+            errs.append(abs(est - f2) / f2)
+        # AGMS std <= sqrt(2/w) * F2; median-of-depth tightens tails.
+        assert np.median(errs) < 3 * np.sqrt(2 / width), (np.median(errs), errs)
+
+    def test_weights_mask_elements(self):
+        rng = np.random.default_rng(11)
+        params = sk.make_sketch_params(rng, 3)
+        k1 = jnp.asarray(rng.integers(0, int(P31), size=100, dtype=np.uint32))
+        k2 = jnp.asarray(rng.integers(0, int(P31), size=100, dtype=np.uint32))
+        w = jnp.asarray((np.arange(100) % 2).astype(np.int32))
+        c_half = sk.sketch_update(sk.empty_counters(3, 256), k1, k2, params, w)
+        c_sub = sk.sketch_update(sk.empty_counters(3, 256), k1[1::2], k2[1::2], params)
+        np.testing.assert_array_equal(np.asarray(c_half), np.asarray(c_sub))
+
+    def test_empty_sketch_estimates_zero(self):
+        assert float(sk.estimate_f2(sk.empty_counters(3, 256))) == 0.0
+
+
+class TestLinearity:
+    @given(st.integers(0, 2**31 - 2), st.integers(1, 50), st.integers(1, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_merge_equals_concat(self, seed, na, nb):
+        rng = np.random.default_rng(seed)
+        params = sk.make_sketch_params(rng, 2)
+        ka1 = rng.integers(0, int(P31), size=na, dtype=np.uint32)
+        ka2 = rng.integers(0, int(P31), size=na, dtype=np.uint32)
+        kb1 = rng.integers(0, int(P31), size=nb, dtype=np.uint32)
+        kb2 = rng.integers(0, int(P31), size=nb, dtype=np.uint32)
+        empty = sk.empty_counters(2, 128)
+        ca = _insert_multiset(empty, params, ka1, ka2)
+        cb = _insert_multiset(empty, params, kb1, kb2)
+        c_all = _insert_multiset(empty, params, np.concatenate([ka1, kb1]),
+                                 np.concatenate([ka2, kb2]))
+        np.testing.assert_array_equal(np.asarray(sk.merge(ca, cb)), np.asarray(c_all))
+
+    def test_update_order_invariant(self):
+        rng = np.random.default_rng(12)
+        params = sk.make_sketch_params(rng, 3)
+        k1 = rng.integers(0, int(P31), size=500, dtype=np.uint32)
+        k2 = rng.integers(0, int(P31), size=500, dtype=np.uint32)
+        perm = rng.permutation(500)
+        empty = sk.empty_counters(3, 512)
+        c1 = _insert_multiset(empty, params, k1, k2)
+        c2 = _insert_multiset(empty, params, k1[perm], k2[perm])
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+class TestInnerProduct:
+    def test_join_size_estimate(self):
+        """|A join B| via sketch inner product (paper §6 mechanics)."""
+        rng = np.random.default_rng(13)
+        shared = rng.integers(0, int(P31), size=(300, 2), dtype=np.uint32)
+        only_a = rng.integers(0, int(P31), size=(500, 2), dtype=np.uint32)
+        only_b = rng.integers(0, int(P31), size=(400, 2), dtype=np.uint32)
+        # A has each shared key 2x -> true inner product = 2 * 300
+        a1 = np.concatenate([shared[:, 0], shared[:, 0], only_a[:, 0]])
+        a2 = np.concatenate([shared[:, 1], shared[:, 1], only_a[:, 1]])
+        b1 = np.concatenate([shared[:, 0], only_b[:, 0]])
+        b2 = np.concatenate([shared[:, 1], only_b[:, 1]])
+        ests = []
+        for seed in range(8):
+            params = sk.make_sketch_params(np.random.default_rng(100 + seed), 5)
+            empty = sk.empty_counters(5, 2048)
+            ca = _insert_multiset(empty, params, a1, a2)
+            cb = _insert_multiset(empty, params, b1, b2)
+            ests.append(float(sk.estimate_inner(ca, cb)))
+        assert abs(np.median(ests) - 600) / 600 < 0.25, ests

@@ -1,0 +1,117 @@
+"""Stream monitor: recordizer correctness, deferred-merge equivalence,
+monitor accuracy on planted duplicates, contamination (join) estimates."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import exact
+from repro.data.recordize import records_from_tokens, np_records_from_tokens
+from repro.data.synthetic import zipf_tokens, shingle_records
+from repro.sketchstream.monitor import (SketchMonitorConfig, init_monitor,
+                                        monitor_update_local, merge_monitor,
+                                        monitor_estimate,
+                                        contamination_estimate, MonitorState)
+
+
+class TestRecordize:
+    def test_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, 50000, size=(8, 64), dtype=np.int32)
+        got = np.asarray(records_from_tokens(jnp.asarray(toks), 6))
+        want = np_records_from_tokens(toks, 6)
+        np.testing.assert_array_equal(got, want)
+
+    def test_identical_sequences_identical_records(self):
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, 1000, size=(4, 48), dtype=np.int32)
+        toks[2] = toks[0]
+        recs = np.asarray(records_from_tokens(jnp.asarray(toks), 6))
+        np.testing.assert_array_equal(recs[0], recs[2])
+        assert not (recs[0] == recs[1]).all()
+
+    def test_span_locality(self):
+        """Editing tokens in one span changes exactly one column."""
+        rng = np.random.default_rng(2)
+        toks = rng.integers(0, 1000, size=(1, 60), dtype=np.int32)
+        toks2 = toks.copy()
+        toks2[0, 15] += 1          # span 1 of 6 (positions 10..19)
+        r1 = np.asarray(records_from_tokens(jnp.asarray(toks), 6))[0]
+        r2 = np.asarray(records_from_tokens(jnp.asarray(toks2), 6))[0]
+        assert (r1 != r2).sum() == 1
+        assert r1[1] != r2[1]
+
+
+class TestMonitor:
+    def test_deferred_merge_equals_single_stream(self):
+        """counters(shard0)+counters(shard1) == counters(all records)."""
+        cfg = SketchMonitorConfig(d=4, s=2, ratio=1.0, width=256, depth=2,
+                                  shards=2)
+        params, state = init_monitor(cfg)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, 999, size=(8, 32), dtype=np.int32))
+        step = jnp.zeros((), jnp.int32)
+        c0, n0 = monitor_update_local(cfg, params, state.counters[0],
+                                      state.n[0], toks[:4], step)
+        c1, n1 = monitor_update_local(cfg, params, state.counters[1],
+                                      state.n[1], toks[4:], step)
+        two = merge_monitor(MonitorState(jnp.stack([c0, c1]),
+                                         jnp.stack([n0, n1]), step))
+
+        cfg1 = SketchMonitorConfig(d=4, s=2, ratio=1.0, width=256, depth=2,
+                                   shards=1)
+        params1, state1 = init_monitor(cfg1)
+        ca, na = monitor_update_local(cfg1, params1, state1.counters[0],
+                                      state1.n[0], toks, step)
+        one = merge_monitor(MonitorState(ca[None], na[None], step))
+        np.testing.assert_array_equal(np.asarray(two.counters),
+                                      np.asarray(one.counters))
+        assert float(two.n) == float(one.n)
+
+    def test_detects_planted_duplicates(self):
+        """Batch stream with duplicated sequences -> monitor's g_d ~ true
+        duplicate pair count (r=1, exact-ish regime)."""
+        d = 4
+        cfg = SketchMonitorConfig(d=d, s=d, ratio=1.0, width=4096, depth=3,
+                                  shards=1)
+        params, state = init_monitor(cfg)
+        rng = np.random.default_rng(4)
+        all_recs = []
+        step = jnp.zeros((), jnp.int32)
+        counters, n = state.counters[0], state.n[0]
+        for i in range(6):
+            toks = rng.integers(0, 5000, size=(32, 32), dtype=np.int32)
+            toks[1] = toks[0]                     # one duplicate pair per batch
+            counters, n = monitor_update_local(
+                cfg, params, counters, n,
+                jnp.asarray(toks), step + i)
+            all_recs.append(np_records_from_tokens(toks, d))
+        state = MonitorState(counters[None], n[None], step)
+        est = monitor_estimate(cfg, state)
+        g_d_true = exact.exact_g(np.concatenate(all_recs), d)
+        assert abs(est["g"][d] - g_d_true) / g_d_true < 0.2, (est["g"], g_d_true)
+
+    def test_contamination_join(self):
+        """Two streams sharing sequences -> §6 join estimate sees them."""
+        d = 4
+        cfg = SketchMonitorConfig(d=d, s=d, ratio=1.0, width=4096, depth=3,
+                                  shards=1)
+        params, st_a = init_monitor(cfg)
+        _, st_b = init_monitor(cfg)
+        rng = np.random.default_rng(5)
+        a = rng.integers(0, 5000, size=(64, 32), dtype=np.int32)
+        b = rng.integers(0, 5000, size=(64, 32), dtype=np.int32)
+        b[:16] = a[:16]                           # 16 contaminated sequences
+        step = jnp.zeros((), jnp.int32)
+        ca, na = monitor_update_local(cfg, params, st_a.counters[0],
+                                      st_a.n[0], jnp.asarray(a), step)
+        cb, nb = monitor_update_local(cfg, params, st_b.counters[0],
+                                      st_b.n[0], jnp.asarray(b), step)
+        est = contamination_estimate(
+            cfg, MonitorState(ca[None], na[None], step),
+            MonitorState(cb[None], nb[None], step))
+        # ordered-pair convention both directions -> 2 * 16... the join
+        # estimator counts (a in A, b in B) matches once: 16 pairs, but our
+        # inversion keeps the x2 convention of the self-join -> accept range
+        j = est["join"][d]
+        assert 10 < j < 45, est["join"]
