@@ -21,6 +21,8 @@ def _fmt_bytes(b):
 
 def load(d):
     rows = []
+    if not os.path.isdir(d):
+        return rows
     for fn in sorted(os.listdir(d)):
         if fn.endswith(".json") and "__" in fn:
             with open(os.path.join(d, fn)) as f:
@@ -90,6 +92,30 @@ def variants_table(rows):
     return "\n".join(out)
 
 
+def service_table(res):
+    """The `service` suite: ingest throughput vs tenant count + query latency."""
+    svc = res.get("service")
+    if not svc:
+        return ""
+    out = ["#### Service — batched multi-tenant ingest / query latency\n",
+           "| tenants | records | dispatch rounds | records/sec |",
+           "|---|---|---|---|"]
+    ingest = sorted((row for key, row in svc.items()
+                     if key.startswith("ingest_")),
+                    key=lambda r: int(r["tenants"]))
+    for row in ingest:
+        out.append(f"| {row['tenants']} | {row['records']} | {row['rounds']} "
+                   f"| {float(row['records_per_sec']):.0f} |")
+    q = svc.get("query")
+    if q:
+        out.append(
+            f"\nsnapshot poll over {q['continuous_queries']} standing queries: "
+            f"p50 {float(q['poll_p50_ms']):.1f} ms, "
+            f"p95 {float(q['poll_p95_ms']):.1f} ms "
+            f"({float(q['per_query_p50_ms']):.2f} ms/query)")
+    return "\n".join(out)
+
+
 def paper_tables(results_path):
     if not os.path.exists(results_path):
         return "(run `python -m benchmarks.run` first)"
@@ -112,6 +138,9 @@ def paper_tables(results_path):
         out.append(f"\n#### {title}\n")
         for k, v in res[name].items():
             out.append(f"- {k}: " + json.dumps(v))
+    svc = service_table(res)
+    if svc:
+        out.append("\n" + svc)
     return "\n".join(out)
 
 

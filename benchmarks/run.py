@@ -3,7 +3,7 @@
 Default (no args) runs the paper benchmarks + the kernel micro-bench and
 collates any dry-run roofline JSONs under benchmarks/out/dryrun into the
 roofline summary table.  Individual benchmarks: table3 fig4_6 fig8 fig9a
-fig9b fig9c fig10 kernels roofline.
+fig9b fig9c fig10 kernels service roofline.
 """
 from __future__ import annotations
 
@@ -53,6 +53,78 @@ def bench_kernels():
     return out
 
 
+def bench_service():
+    """Estimation-service numbers: batched ingest throughput as tenant count
+    grows (1/4/16 streams sharing one hash group -> one dispatch per round)
+    and snapshot query latency (p50/p95).  These are the service-side perf
+    trajectory; kernel-level wins show up here as records/sec."""
+    import jax
+    from repro.core.sjpc import SJPCConfig
+    from repro.service import ContinuousQuery, EstimationService, ServiceConfig
+
+    cfg = SJPCConfig(d=6, s=4, ratio=0.5, width=1024, depth=3, seed=11)
+    rng = np.random.default_rng(0)
+    out = {}
+    records_per_tenant = 4096
+    for tenants in (1, 4, 16):
+        svc = EstimationService(ServiceConfig(batch_rows=512, window_epochs=4))
+        svc.create_group("g", cfg)
+        names = [f"t{i}" for i in range(tenants)]
+        for nm in names:
+            svc.create_stream(nm, "g")
+        batches = {nm: rng.integers(0, 1000, size=(records_per_tenant, cfg.d),
+                                    dtype=np.uint32) for nm in names}
+        def _block():
+            # flush() enqueues async dispatches; time the compute, not the
+            # enqueue (as bench_kernels does)
+            jax.block_until_ready([svc.registry.stream(nm).window.total.counters
+                                   for nm in names])
+
+        # warmup: compile the (S, batch_rows) executable
+        for nm in names:
+            svc.ingest(nm, batches[nm][:512])
+        svc.flush()
+        _block()
+        t0 = time.time()
+        for nm in names:
+            svc.ingest(nm, batches[nm][512:])
+        svc.flush()
+        _block()
+        dt = time.time() - t0
+        total = (records_per_tenant - 512) * tenants
+        out[f"ingest_{tenants}t"] = {
+            "tenants": tenants, "records": total, "seconds": dt,
+            "records_per_sec": total / dt,
+            "rounds": svc.describe()["groups"]["g"]["ingest"]["rounds"],
+        }
+        print(f"ingest {tenants:>2} tenants: {total / dt:>10.0f} records/s "
+              f"({total} records, {dt:.2f}s)")
+
+        if tenants == 4:
+            for nm in names:
+                svc.register_continuous(
+                    ContinuousQuery(f"q/{nm}", "self_join", (nm,)))
+            svc.register_continuous(
+                ContinuousQuery("q/join", "join", (names[0], names[1])))
+            svc.poll()                       # warmup
+            lats = []
+            for _ in range(20):
+                t0 = time.time()
+                svc.poll()
+                lats.append(time.time() - t0)
+            lats.sort()
+            out["query"] = {
+                "continuous_queries": tenants + 1,
+                "poll_p50_ms": 1e3 * lats[len(lats) // 2],
+                "poll_p95_ms": 1e3 * lats[int(len(lats) * 0.95)],
+                "per_query_p50_ms": 1e3 * lats[len(lats) // 2] / (tenants + 1),
+            }
+            print(f"poll ({tenants + 1} standing queries): "
+                  f"p50 {out['query']['poll_p50_ms']:.1f}ms "
+                  f"p95 {out['query']['poll_p95_ms']:.1f}ms")
+    return out
+
+
 def bench_roofline():
     """Collate dry-run JSONs into the roofline summary table."""
     d = os.path.join(OUT_DIR, "dryrun")
@@ -90,13 +162,15 @@ def bench_roofline():
 def main(argv):
     os.makedirs(OUT_DIR, exist_ok=True)
     from benchmarks import paper_benchmarks as PB
-    names = argv or (list(PB.ALL) + ["kernels", "roofline"])
+    names = argv or (list(PB.ALL) + ["kernels", "service", "roofline"])
     results = {}
     for name in names:
         print(f"\n=== {name} ===")
         t0 = time.time()
         if name == "kernels":
             results[name] = bench_kernels()
+        elif name == "service":
+            results[name] = bench_service()
         elif name == "roofline":
             results[name] = bench_roofline()
         else:

@@ -1,0 +1,67 @@
+"""Serve windowed similarity estimates to multiple tenants.
+
+    PYTHONPATH=src python examples/serve_estimates.py
+
+Three tenant streams share one hash group (so any pair supports the §6
+join estimator).  Each "tick" the tenants ingest a batch of records --
+buffered host-side, then flushed in ONE batched device dispatch for all
+tenants -- and the epoch rotates, expiring data older than WINDOW epochs
+by counter subtraction.  Standing (continuous) queries are polled each
+tick from a single shared snapshot, with analytical error bars, and the
+windowed self-join estimate is compared against the exact count over the
+same live window.
+"""
+import numpy as np
+
+from repro.core import exact, sjpc
+from repro.data.synthetic import shingle_records
+from repro.service import ContinuousQuery, EstimationService, ServiceConfig
+
+D, S, WINDOW, TICKS, BATCH = 6, 4, 4, 10, 800
+
+svc = EstimationService(ServiceConfig(batch_rows=256, window_epochs=WINDOW))
+group = svc.create_group("tenants", sjpc.SJPCConfig(d=D, s=S, ratio=1.0,
+                                                    width=4096, depth=3))
+for t in ("alpha", "beta", "gamma"):
+    svc.create_stream(t, "tenants")
+
+svc.register_continuous(ContinuousQuery("alpha/self", "self_join", ("alpha",)))
+svc.register_continuous(ContinuousQuery("alpha|beta", "join", ("alpha", "beta")))
+
+mem = svc.registry.stream("alpha").window.memory_bytes()
+print(f"{D=} {S=} window={WINDOW} epochs; per-tenant window memory "
+      f"{mem / 1024:.0f} KiB\n")
+
+# beta replays a slice of alpha's records each tick -> a planted join signal
+history = {t: [] for t in ("alpha", "beta", "gamma")}
+for tick in range(TICKS):
+    a = shingle_records(BATCH, d=D, seed=100 + tick, group=6,
+                        dup_profile=((4, 0.10), (5, 0.05), (6, 0.02)))
+    b = np.concatenate([a[:BATCH // 8],
+                        shingle_records(BATCH - BATCH // 8, d=D,
+                                        seed=500 + tick, group=6)])
+    g = shingle_records(BATCH, d=D, seed=900 + tick, group=6)
+    for name, recs in (("alpha", a), ("beta", b), ("gamma", g)):
+        svc.ingest(name, recs)
+        history[name].append(recs)
+        # mirror the live window: after advance_epoch the open epoch is
+        # empty, so the window holds the last WINDOW-1 closed epochs
+        history[name] = history[name][-(WINDOW - 1):]
+    svc.advance_epoch()
+
+    results = svc.poll()
+    r = results["alpha/self"]
+    true_g = exact.exact_g(np.concatenate(history["alpha"]), S)
+    j = results["alpha|beta"]
+    print(f"tick {tick}: alpha g_{S} = {r.estimate:>9.0f} +/- {r.stderr:>8.0f}"
+          f"  (exact {true_g:>9.0f})   alpha|beta join = {j.estimate:>7.0f}")
+
+print("\nall-thresholds snapshot for alpha:")
+for k, r in svc.snapshot().all_thresholds("alpha").items():
+    print(f"  s={k}: {r.estimate:>10.0f} +/- {r.stderr:.0f}")
+
+d = svc.describe()
+ing = d["groups"]["tenants"]["ingest"]
+print(f"\ningest: {ing['submitted_records']} records in {ing['rounds']} "
+      f"batched dispatches ({ing['padded_rows']} padded rows); "
+      f"flush time {d['flush_s']:.2f}s")

@@ -1,0 +1,57 @@
+"""Version compatibility shims for the jax API surface.
+
+The repo targets the jax that ships in the container (0.4.x today) while
+using the modern spellings where they exist:
+
+- ``shard_map``: ``jax.shard_map`` (new) vs ``jax.experimental.shard_map``
+  (0.4.x), and the replication-check kwarg renamed check_rep -> check_vma.
+- ``set_mesh``: ``jax.set_mesh`` / ``jax.sharding.use_mesh`` context manager;
+  on 0.4.x the ``Mesh`` object is itself the context manager that installs
+  the ambient mesh ``with_sharding_constraint`` resolves bare
+  ``PartitionSpec``s against.
+
+Keep this module dependency-free (stdlib + jax only) -- it is imported by
+optim, launch, and service.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+try:                                        # jax >= 0.5 style
+    _shard_map = jax.shard_map              # type: ignore[attr-defined]
+    _CHECK_KWARG = "check_vma"
+except AttributeError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+@functools.wraps(_shard_map)
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg normalized.
+
+    Accepts either ``check_vma`` or ``check_rep`` and forwards whichever
+    name the installed jax understands.  Usable directly or via
+    ``functools.partial`` exactly like the real function.
+    """
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        kwargs[_CHECK_KWARG] = check
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh when the
+    installed jax supports one; a no-op context otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)           # type: ignore[attr-defined]
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    if hasattr(mesh, "__enter__"):          # jax 0.4.x: Mesh is a context mgr
+        return mesh
+    return contextlib.nullcontext(mesh)

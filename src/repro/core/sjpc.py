@@ -93,38 +93,73 @@ def _level_tables(cfg: SJPCConfig):
 
 
 def update(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
-           key: jax.Array | None = None, *, update_fn=None) -> SJPCState:
+           key: jax.Array | None = None, *, update_fn=None,
+           row_mask: jax.Array | None = None) -> SJPCState:
     """Absorb a batch of records.  values: (B, d) uint32/int32.
 
     ``update_fn(counters, fp1, fp2, level_params, weights) -> counters`` lets
     callers swap the reference jnp update for the Pallas kernel; default is
     the reference.
+
+    ``row_mask`` ((B,) int32/bool, optional) marks valid rows; rows with mask
+    0 contribute nothing to the counters or to ``n``.  This is what lets the
+    service ingest pipeline pad per-tenant batches to a shared static shape
+    and still produce counters identical to an unpadded per-stream update.
     """
     values = jnp.asarray(values).astype(jnp.uint32)
     B = values.shape[0]
     if key is None:
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xC0FFEE), state.step)
     update_fn = update_fn or sk.sketch_update
+    if row_mask is not None:
+        row_mask = jnp.asarray(row_mask).astype(jnp.int32).reshape(B)
 
     counters = state.counters
     new_counters = []
     for idx, level in enumerate(_level_tables(cfg)):
         lkey = jax.random.fold_in(key, idx)
         weights = proj.sample_combo_weights(lkey, B, level.num, cfg.ratio)
+        if row_mask is not None:
+            weights = weights * row_mask[:, None]
         fp1, fp2 = subvalue_fingerprints(
             values, jnp.asarray(level.masks), jnp.asarray(level.ids), params.fp_bases)
         level_params = sk.SketchParams(params.bucket_coeffs[idx], params.sign_coeffs[idx])
         new_counters.append(update_fn(counters[idx], fp1, fp2, level_params, weights))
+    n_new = jnp.float32(B) if row_mask is None else row_mask.sum().astype(jnp.float32)
     return SJPCState(
         counters=jnp.stack(new_counters),
-        n=state.n + jnp.float32(B),
+        n=state.n + n_new,
         step=state.step + 1,
     )
 
 
 def merge(a: SJPCState, b: SJPCState) -> SJPCState:
-    """Linearity: sketches of disjoint sub-streams add."""
-    return SJPCState(a.counters + b.counters, a.n + b.n, jnp.maximum(a.step, b.step))
+    """Linearity: sketches of disjoint sub-streams add.
+
+    ``step`` feeds ``jax.random.fold_in`` to derive per-batch sampling keys,
+    so the merged step must be a value no shard has already folded in.
+    ``maximum`` is wrong there: two shards merged at equal step k
+    would hand the merged sketch step k -- the exact fold-in key a shard that
+    keeps ingesting would use for its own next batch, correlating the
+    supposedly independent projection samples (and, under tree merges,
+    replaying keys the shards already consumed).  The *sum* of the step
+    counters dominates every step either side has folded in, so post-merge
+    updates draw fresh keys.  Shards that keep ingesting concurrently after
+    a merge (forked lineages) should pass explicit ``key``s to ``update``
+    instead of relying on the step counter.
+    """
+    return SJPCState(a.counters + b.counters, a.n + b.n, a.step + b.step)
+
+
+def subtract(a: SJPCState, b: SJPCState) -> SJPCState:
+    """Linearity, the other direction: remove the sub-stream ``b`` sketched
+    into ``a`` (sliding-window expiry; ``b`` must be a sub-stream of ``a``).
+
+    ``step`` keeps ``a.step``: expiry removes old *data*, not PRNG history --
+    the keys ``b`` consumed were consumed, and reusing them would correlate
+    a re-ingest of the expired epoch with live data.
+    """
+    return SJPCState(a.counters - b.counters, a.n - b.n, a.step)
 
 
 def all_reduce(state: SJPCState, axis_names) -> SJPCState:

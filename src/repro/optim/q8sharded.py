@@ -15,7 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from .adamw import Optimizer, clip_by_global_norm
 from .q8adam import quantize, dequantize, quantize_v, dequantize_v, QTensor

@@ -17,6 +17,13 @@ The driver owns the train loop around launch.train.make_train_step:
   ``straggler_limit`` consecutive offenders the driver triggers mitigation
   (on a real cluster: evict + reshard via the elastic checkpoint; here the
   hook records the event and re-bases the deadline).
+- **Sketch telemetry**: with only ``monitor_cfg`` the driver queries the
+  whole-stream monitor directly (legacy).  Passing ``service_client`` (a
+  :class:`repro.service.MonitorServiceClient`) instead publishes the
+  monitor's delta to the estimation service each interval, making the
+  trainer one tenant among many: the sketch log gains sliding-window
+  estimates and error bars, and the same service can answer train<->eval
+  contamination joins against other published streams.
 """
 from __future__ import annotations
 
@@ -51,12 +58,13 @@ class DriverConfig:
 class TrainDriver:
     def __init__(self, step_fn, init_state, make_batch: Callable[[int], Any],
                  cfg: DriverConfig, *, monitor_cfg=None, state_template=None,
-                 shardings=None):
+                 shardings=None, service_client=None):
         """``make_batch(step) -> batch`` must be deterministic in step."""
         self.step_fn = step_fn
         self.cfg = cfg
         self.make_batch = make_batch
         self.monitor_cfg = monitor_cfg
+        self.service_client = service_client
         self.shardings = shardings
         self.state = init_state
         self.template = state_template if state_template is not None else init_state
@@ -82,6 +90,8 @@ class TrainDriver:
         state, man = restore_checkpoint(self.cfg.ckpt_dir, self.template,
                                         shardings=self.shardings)
         self.state = state
+        if self.service_client is not None and self.state.monitor is not None:
+            self.service_client.resync(self.state.monitor)
         self.events.append({"kind": "restore", "step": man.step})
         return man.step
 
@@ -130,10 +140,18 @@ class TrainDriver:
                     m["step"] = step
                     m["dt"] = dt
                     self.metrics_log.append(m)
-                if (self.monitor_cfg is not None
+                if ((self.service_client is not None
+                     or self.monitor_cfg is not None)
+                        and getattr(self.state, "monitor", None) is not None
                         and step % self.cfg.sketch_log_every == 0):
-                    est = monitor_estimate(self.monitor_cfg, self.state.monitor)
-                    self.sketch_log.append({"step": step, **est["g"]})
+                    if self.service_client is not None:
+                        self.service_client.publish(self.state.monitor)
+                        self.sketch_log.append(
+                            self.service_client.log_entry(step))
+                    else:
+                        est = monitor_estimate(self.monitor_cfg,
+                                               self.state.monitor)
+                        self.sketch_log.append({"step": step, **est["g"]})
                 if step > 0 and step % self.cfg.ckpt_every == 0:
                     self._checkpoint()
             except Exception as e:                   # noqa: BLE001

@@ -1,0 +1,19 @@
+"""repro.service -- multi-tenant streaming estimation service.
+
+Sliding-window SJPC sketches behind a registry of named streams, batched
+single-dispatch ingest, and a snapshot query engine with analytical error
+bars.  See DESIGN.md §10 for the architecture and invariants.
+"""
+from .client import MonitorServiceClient
+from .ingest import IngestPipeline, ingest_key, multi_stream_update
+from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
+from .registry import HashGroup, StreamEntry, StreamRegistry
+from .service import EstimationService, ServiceConfig
+from .window import WindowedSketch
+
+__all__ = [
+    "ContinuousQuery", "EstimationService", "HashGroup", "IngestPipeline",
+    "MonitorServiceClient", "QueryEngine", "QueryResult", "ServiceConfig",
+    "Snapshot", "StreamEntry", "StreamRegistry", "WindowedSketch",
+    "ingest_key", "multi_stream_update",
+]

@@ -1,0 +1,155 @@
+"""Batched ingest: double-buffered submission, fixed-shape coalescing, and
+ONE jit'd multi-stream sketch update per dispatch.
+
+Why batch across tenants: each tenant's trickle of records is far too small
+to saturate a device, and per-tenant dispatches pay per-call overhead S
+times.  Instead the pipeline stacks every stream of a hash group along a
+leading axis -- counters (S, levels, t, w), records (S, B, d), row masks
+(S, B), per-stream PRNG keys (S, 2) -- and vmaps the single-stream
+``sjpc.update`` over that axis inside one jit.  The inner update is the
+same code the offline estimator uses (and dispatches to the fused Pallas
+``sketch_update`` kernel on TPU backends), so one device program serves all
+tenants per round.
+
+Shapes are static: records are coalesced into rounds of exactly
+``batch_rows`` rows per stream, the tail round padded with zero rows that
+carry row_mask 0 (contributing nothing to counters or n -- see
+``sjpc.update``).  jit therefore compiles once per (S, batch_rows) and
+every subsequent flush reuses the executable.
+
+Double buffering: ``submit`` appends to the *front* buffer while ``flush``
+drains the *back* buffer; the buffers swap at flush start.  In-process this
+models (and under an async caller provides) ingest that never blocks on a
+device dispatch in flight.
+
+Determinism: the sampling key for stream u's i-th consumed round is
+``ingest_key(cfg, uid, i)`` -- a pure function, so any window can be
+re-built offline bit-exactly by replaying the same record rounds with the
+same keys (tests/test_service.py does exactly this).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCParams, SJPCState
+from repro.kernels.ops import make_sjpc_update_fn
+
+from .registry import HashGroup, StreamEntry
+
+_INGEST_SALT = 0x5E41CE
+
+
+def ingest_key(cfg: SJPCConfig, uid: int, round_idx: int) -> jax.Array:
+    """The PRNG key stream u folds into its round_idx-th ingest round."""
+    base = jax.random.PRNGKey(cfg.seed ^ _INGEST_SALT)
+    return jax.random.fold_in(jax.random.fold_in(base, uid), round_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas", "interpret"))
+def multi_stream_update(cfg: SJPCConfig, params: SJPCParams, counters, n,
+                        steps, values, row_mask, keys, *, use_pallas=None,
+                        interpret=None):
+    """One device dispatch updating every stream of a group.
+
+    counters (S, L, t, w) int32; n (S,) f32; steps (S,) int32;
+    values (S, B, d) uint32; row_mask (S, B) int32; keys (S,) PRNG keys.
+    Returns the updated (counters, n, steps).
+    """
+    update_fn = make_sjpc_update_fn(use_pallas=use_pallas, interpret=interpret)
+
+    def one(c, n_s, step_s, vals, mask, key):
+        st = sjpc.update(cfg, params, SJPCState(c, n_s, step_s), vals,
+                         key=key, row_mask=mask, update_fn=update_fn)
+        return st.counters, st.n, st.step
+
+    return jax.vmap(one)(counters, n, steps, values, row_mask, keys)
+
+
+class IngestPipeline:
+    """Per-group ingest front end.  Not thread-safe by itself; the service
+    serializes submit/flush (the double buffer is about device overlap and
+    fixed-shape coalescing, not about lock-free concurrency)."""
+
+    def __init__(self, group: HashGroup, *, batch_rows: int = 256,
+                 use_pallas: bool | None = None, interpret: bool | None = None):
+        assert batch_rows >= 1
+        self.group = group
+        self.batch_rows = batch_rows
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self._front: dict[str, list[np.ndarray]] = {}
+        self._back: dict[str, list[np.ndarray]] = {}
+        self.stats = {"submitted_records": 0, "flushes": 0, "rounds": 0,
+                      "padded_rows": 0, "dispatch_rows": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, name: str, records) -> int:
+        """Queue records ((n, d) integer array) for ``name``; returns n."""
+        records = np.ascontiguousarray(np.asarray(records, dtype=np.uint32))
+        if records.ndim != 2 or records.shape[1] != self.group.cfg.d:
+            raise ValueError(
+                f"records must be (n, d={self.group.cfg.d}); got {records.shape}")
+        self._front.setdefault(name, []).append(records)
+        self.stats["submitted_records"] += records.shape[0]
+        return records.shape[0]
+
+    def pending_rows(self) -> int:
+        return sum(r.shape[0] for chunks in self._front.values() for r in chunks)
+
+    # ------------------------------------------------------------------
+    def flush(self, entries: list[StreamEntry]) -> dict[str, SJPCState]:
+        """Drain the queued records of ``entries`` (all streams of this
+        group, in uid order) and return each stream's new cumulative state.
+
+        Every stream participates in every round (static S for jit shape
+        stability); streams with no remaining records ride along fully
+        masked.  ``entry.flushes`` counts *rounds* consumed, and is the
+        replay coordinate for :func:`ingest_key`.
+        """
+        self._front, self._back = self._back, self._front
+        pending = {name: (np.concatenate(chunks) if chunks else
+                          np.zeros((0, self.group.cfg.d), np.uint32))
+                   for name, chunks in self._back.items()}
+        self._back = {}
+
+        entries = sorted(entries, key=lambda e: e.uid)
+        B, cfg = self.batch_rows, self.group.cfg
+        counts = [pending.get(e.name, np.zeros((0, cfg.d), np.uint32)).shape[0]
+                  for e in entries]
+        rounds = max((-(-c // B) for c in counts if c), default=0)
+        out = {e.name: e.window.total for e in entries}
+        if rounds == 0:
+            self.stats["flushes"] += 1
+            return out
+
+        counters = jnp.stack([out[e.name].counters for e in entries])
+        n = jnp.stack([out[e.name].n for e in entries])
+        steps = jnp.stack([out[e.name].step for e in entries])
+        for r in range(rounds):
+            values = np.zeros((len(entries), B, cfg.d), np.uint32)
+            mask = np.zeros((len(entries), B), np.int32)
+            keys = []
+            for i, e in enumerate(entries):
+                rows = pending.get(e.name,
+                                   np.zeros((0, cfg.d), np.uint32))[r * B:(r + 1) * B]
+                values[i, :rows.shape[0]] = rows
+                mask[i, :rows.shape[0]] = 1
+                keys.append(ingest_key(cfg, e.uid, e.flushes))
+                e.flushes += 1
+                e.records += int(rows.shape[0])
+                self.stats["padded_rows"] += B - rows.shape[0]
+            counters, n, steps = multi_stream_update(
+                cfg, self.group.params, counters, n, steps,
+                jnp.asarray(values), jnp.asarray(mask), jnp.stack(keys),
+                use_pallas=self.use_pallas, interpret=self.interpret)
+            self.stats["rounds"] += 1
+            self.stats["dispatch_rows"] += len(entries) * B
+        self.stats["flushes"] += 1
+        for i, e in enumerate(entries):
+            out[e.name] = SJPCState(counters[i], n[i], steps[i])
+        return out

@@ -1,0 +1,163 @@
+"""Query engine: self-join / join / all-thresholds estimates from a snapshot.
+
+Queries never touch live ingest state: the engine materializes a
+:class:`Snapshot` -- each stream's windowed ``SJPCState`` pulled at one
+instant -- and answers any number of queries from it.  That is what makes
+*batched continuous queries* cheap: the expensive parts (device->host
+counter pull, the int64-exact level F2 pass) are computed once per stream
+per snapshot and memoized; every additional query against the same snapshot
+is a lattice inversion over d-s+1 numbers.
+
+Error bars come from the paper's analytical bounds: Theorem 1 (projection
+sampling alone) and Theorem 2 (sampling + sketching, width w) bound
+var(G_s / g_s), so ``sqrt(bound)`` is a relative standard-deviation bound.
+The true g_s is unknown at query time, so the estimate is plugged in --
+standard practice, conservative when the estimate is low, and reported as
+an explicit ``stderr`` field rather than silently folded in.  For join
+queries the self-join bound with n = max(n_a, n_b) is used as a proxy (the
+paper proves no join-specific bound; DESIGN.md §10.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCState
+
+from .registry import StreamRegistry
+
+
+class QueryResult(NamedTuple):
+    kind: str                  # "self_join" | "join" | "all_thresholds"
+    streams: tuple             # 1 or 2 stream names
+    s: int                     # threshold the estimate answers
+    estimate: float            # g_s (self-join) or join size
+    stderr: float              # absolute 1-sigma bound (online, Theorem 2)
+    stderr_offline: float      # absolute 1-sigma bound (sampling only, Thm 1)
+    per_level: np.ndarray      # X_k for k = s..d
+    n: tuple                   # records in the window, per stream
+    window_epochs: tuple       # live epochs per stream (coverage metadata)
+
+
+def _stderr(cfg: SJPCConfig, s: int, n: float, g: float) -> tuple[float, float]:
+    """(online, offline) absolute 1-sigma bounds at plug-in g."""
+    if g <= 0:
+        return 0.0, 0.0
+    off = math.sqrt(sjpc.offline_variance_bound(cfg.d, s, cfg.ratio, g)) * g
+    on = math.sqrt(sjpc.online_variance_bound(
+        cfg.d, s, cfg.ratio, cfg.width, n, g)) * g
+    return on, off
+
+
+@dataclasses.dataclass(frozen=True)
+class _StreamView:
+    name: str
+    cfg: SJPCConfig
+    state: SJPCState
+    n: float
+    live_epochs: int
+    window_epochs: int | None
+
+
+class Snapshot:
+    """Immutable view of every stream's window at one instant."""
+
+    def __init__(self, views: dict[str, _StreamView],
+                 registry: StreamRegistry):
+        self._views = views
+        self._registry = registry
+        self._f2_cache: dict[str, np.ndarray] = {}
+
+    def _view(self, name: str) -> _StreamView:
+        if name not in self._views:
+            raise KeyError(f"stream {name!r} not in snapshot")
+        return self._views[name]
+
+    def _level_f2(self, name: str) -> np.ndarray:
+        if name not in self._f2_cache:
+            self._f2_cache[name] = sjpc.level_f2(self._view(name).state)
+        return self._f2_cache[name]
+
+    # ------------------------------------------------------------------
+    def self_join(self, name: str, s: int | None = None, *,
+                  clamp: bool = True) -> QueryResult:
+        """Windowed g_s for ``name`` (s defaults to, and must be >=, cfg.s)."""
+        v = self._view(name)
+        s = v.cfg.s if s is None else s
+        if not v.cfg.s <= s <= v.cfg.d:
+            raise ValueError(f"s={s} outside sketched range "
+                             f"[{v.cfg.s}, {v.cfg.d}] of {name!r}")
+        y = self._level_f2(name)
+        x = sjpc.f2_to_pair_count(v.cfg.d, v.cfg.s, v.n, v.cfg.ratio, y,
+                                  clamp=clamp)
+        xs = x[s - v.cfg.s:]
+        g = float(xs.sum()) + v.n
+        on, off = _stderr(v.cfg, s, v.n, g)
+        return QueryResult("self_join", (name,), s, g, on, off, xs,
+                           (v.n,), (v.live_epochs,))
+
+    def join(self, a: str, b: str, s: int | None = None, *,
+             clamp: bool = True) -> QueryResult:
+        """Windowed similarity-join size of two same-group streams (§6)."""
+        self._registry.require_joinable(a, b)
+        va, vb = self._view(a), self._view(b)
+        cfg = va.cfg
+        s = cfg.s if s is None else s
+        if not cfg.s <= s <= cfg.d:
+            raise ValueError(f"s={s} outside sketched range [{cfg.s}, {cfg.d}]")
+        y = sjpc.join_level_inner(va.state, vb.state)
+        x = sjpc.inner_to_join_count(cfg.d, cfg.s, cfg.ratio, y, clamp=clamp)
+        xs = x[s - cfg.s:]
+        j = float(xs.sum())
+        on, off = _stderr(cfg, s, max(va.n, vb.n), max(j, 1.0))
+        return QueryResult("join", (a, b), s, j, on, off, xs,
+                           (va.n, vb.n), (va.live_epochs, vb.live_epochs))
+
+    def all_thresholds(self, name: str, *, clamp: bool = True) -> dict[int, QueryResult]:
+        """g_k for every k in [cfg.s, d] -- one inversion, d-s+1 results."""
+        v = self._view(name)
+        return {k: self.self_join(name, k, clamp=clamp)
+                for k in range(v.cfg.s, v.cfg.d + 1)}
+
+    def streams(self) -> list[str]:
+        return list(self._views)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousQuery:
+    """A standing query evaluated against each snapshot (``service.poll``)."""
+    name: str
+    kind: str                       # "self_join" | "join" | "all_thresholds"
+    streams: tuple                  # (a,) or (a, b)
+    s: int | None = None
+
+    def evaluate(self, snap: Snapshot):
+        if self.kind == "self_join":
+            return snap.self_join(self.streams[0], self.s)
+        if self.kind == "join":
+            return snap.join(self.streams[0], self.streams[1], self.s)
+        if self.kind == "all_thresholds":
+            return snap.all_thresholds(self.streams[0])
+        raise ValueError(f"unknown query kind {self.kind!r}")
+
+
+class QueryEngine:
+    def __init__(self, registry: StreamRegistry):
+        self._registry = registry
+
+    def snapshot(self, names: list[str] | None = None) -> Snapshot:
+        entries = (self._registry.streams() if names is None
+                   else [self._registry.stream(n) for n in names])
+        views = {}
+        for e in entries:
+            st = e.window.window_state()
+            views[e.name] = _StreamView(
+                name=e.name, cfg=self._registry.group(e.group_id).cfg,
+                state=st, n=float(np.asarray(st.n)),
+                live_epochs=e.window.live_epochs,
+                window_epochs=e.window.window_epochs)
+        return Snapshot(views, self._registry)

@@ -1,0 +1,103 @@
+"""Sketch registry: many named streams (tenants), grouped by shared hashes.
+
+A **hash group** owns one ``SJPCConfig`` and one draw of ``SJPCParams``
+(bucket/sign hash coefficients + fingerprint bases).  Every stream
+registered into the group sketches with those exact parameters, which is
+the paper's §6 precondition: the similarity-*join* estimator is the sketch
+inner product, and inner products are only meaningful between sketches
+built with identical hash functions.  Streams in different groups can use
+different configs (dimensionality, threshold, width, ...) but are not
+pairwise joinable -- the registry enforces this at query time.
+
+Each stream carries its own :class:`~repro.service.window.WindowedSketch`,
+so tenants in one group may still have different window lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCParams
+
+from .window import WindowedSketch
+
+
+@dataclasses.dataclass(frozen=True)
+class HashGroup:
+    group_id: str
+    cfg: SJPCConfig
+    params: SJPCParams
+
+
+@dataclasses.dataclass
+class StreamEntry:
+    name: str
+    group_id: str
+    uid: int                        # dense per-registry id (keys, stacking order)
+    window: WindowedSketch
+    flushes: int = 0                # ingest flushes consumed (PRNG folding)
+    records: int = 0                # total records ever ingested
+
+
+class StreamRegistry:
+    def __init__(self):
+        self._groups: dict[str, HashGroup] = {}
+        self._streams: dict[str, StreamEntry] = {}
+        self._next_uid = 0
+
+    # ------------------------------------------------------------------
+    def create_group(self, group_id: str, cfg: SJPCConfig) -> HashGroup:
+        if group_id in self._groups:
+            raise ValueError(f"group {group_id!r} already exists")
+        params, _ = sjpc.init(cfg)
+        group = HashGroup(group_id=group_id, cfg=cfg, params=params)
+        self._groups[group_id] = group
+        return group
+
+    def register(self, name: str, group_id: str,
+                 window_epochs: int | None = None) -> StreamEntry:
+        if name in self._streams:
+            raise ValueError(f"stream {name!r} already registered")
+        group = self.group(group_id)
+        _, state = sjpc.init(group.cfg)     # zero counters, fresh step
+        entry = StreamEntry(
+            name=name, group_id=group_id, uid=self._next_uid,
+            window=WindowedSketch(group.cfg, state, window_epochs))
+        self._next_uid += 1
+        self._streams[name] = entry
+        return entry
+
+    # ------------------------------------------------------------------
+    def group(self, group_id: str) -> HashGroup:
+        if group_id not in self._groups:
+            raise KeyError(f"unknown group {group_id!r}")
+        return self._groups[group_id]
+
+    def stream(self, name: str) -> StreamEntry:
+        if name not in self._streams:
+            raise KeyError(f"unknown stream {name!r}")
+        return self._streams[name]
+
+    def group_of(self, name: str) -> HashGroup:
+        return self.group(self.stream(name).group_id)
+
+    def streams(self, group_id: str | None = None) -> list[StreamEntry]:
+        entries = list(self._streams.values())
+        if group_id is not None:
+            entries = [e for e in entries if e.group_id == group_id]
+        return entries
+
+    def groups(self) -> list[HashGroup]:
+        return list(self._groups.values())
+
+    def joinable(self, a: str, b: str) -> bool:
+        """Two streams support the §6 join estimator iff they share hashes."""
+        return self.stream(a).group_id == self.stream(b).group_id
+
+    def require_joinable(self, a: str, b: str) -> HashGroup:
+        if not self.joinable(a, b):
+            raise ValueError(
+                f"streams {a!r} ({self.stream(a).group_id}) and {b!r} "
+                f"({self.stream(b).group_id}) are in different hash groups; "
+                "the join estimator needs identical hash params (paper §6)")
+        return self.group_of(a)

@@ -1,0 +1,156 @@
+"""`EstimationService`: the multi-tenant streaming estimation front end.
+
+Composes the subsystem (DESIGN.md §10):
+
+  registry.py   named streams grouped by shared hash params (join-ability)
+  window.py     per-stream sliding windows; expiry = counter subtraction
+  ingest.py     double-buffered, fixed-shape, single-dispatch batched ingest
+  query.py      snapshot-based queries with analytical error bars
+
+Lifecycle:
+
+    svc = EstimationService()
+    svc.create_group("g", SJPCConfig(d=6, s=4, width=2048, depth=3))
+    svc.create_stream("tenant-a", "g", window_epochs=8)
+    svc.ingest("tenant-a", records)        # buffered (numpy in, no device work)
+    svc.flush()                            # one jit'd dispatch per group round
+    svc.advance_epoch()                    # close the epoch on every window
+    r = svc.snapshot().self_join("tenant-a")   # estimate +/- r.stderr
+
+``ingest`` is deliberately device-free so tenant request handling stays
+cheap; all device work happens in ``flush`` (and is shared across tenants).
+``poll()`` evaluates the registered continuous queries against one shared
+snapshot -- the batched continuous-query path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCState
+
+from .ingest import IngestPipeline
+from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
+from .registry import HashGroup, StreamEntry, StreamRegistry
+
+
+_DEFAULT_WINDOW = object()       # "use ServiceConfig.window_epochs" sentinel
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    batch_rows: int = 256            # ingest round size per stream
+    window_epochs: int | None = 8    # default; per-stream override at create
+    auto_flush_rows: int | None = None   # flush() when a group's backlog hits this
+    use_pallas: bool | None = None   # None = auto (Pallas on TPU)
+    interpret: bool | None = None    # forwarded to the Pallas path
+
+
+class EstimationService:
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        self.registry = StreamRegistry()
+        self.engine = QueryEngine(self.registry)
+        self._pipelines: dict[str, IngestPipeline] = {}
+        self._continuous: dict[str, ContinuousQuery] = {}
+        self.stats = {"ingested_records": 0, "flush_s": 0.0, "epochs": 0,
+                      "snapshots": 0, "polls": 0}
+
+    # -- provisioning ---------------------------------------------------
+    def create_group(self, group_id: str, cfg: SJPCConfig) -> HashGroup:
+        group = self.registry.create_group(group_id, cfg)
+        self._pipelines[group_id] = IngestPipeline(
+            group, batch_rows=self.cfg.batch_rows,
+            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+        return group
+
+    def create_stream(self, name: str, group_id: str,
+                      window_epochs=_DEFAULT_WINDOW) -> StreamEntry:
+        if window_epochs is _DEFAULT_WINDOW:
+            window_epochs = self.cfg.window_epochs
+        return self.registry.register(name, group_id, window_epochs)
+
+    # -- ingest ---------------------------------------------------------
+    def ingest(self, name: str, records) -> int:
+        """Buffer records for ``name``; device work is deferred to flush."""
+        entry = self.registry.stream(name)
+        pipe = self._pipelines[entry.group_id]
+        n = pipe.submit(name, records)
+        self.stats["ingested_records"] += n
+        if (self.cfg.auto_flush_rows is not None
+                and pipe.pending_rows() >= self.cfg.auto_flush_rows):
+            self._flush_group(entry.group_id)
+        return n
+
+    def ingest_state_delta(self, name: str, delta: SJPCState) -> None:
+        """Absorb an externally-sketched delta (e.g. the training monitor's
+        counters since its last publish) into ``name``'s open epoch.  The
+        delta must have been sketched with this stream's group params."""
+        entry = self.registry.stream(name)
+        entry.window.absorb_delta(sjpc.merge(entry.window.total, delta))
+
+    def _flush_group(self, group_id: str) -> None:
+        t0 = time.perf_counter()
+        pipe = self._pipelines[group_id]
+        entries = self.registry.streams(group_id)
+        new_states = pipe.flush(entries)
+        for e in entries:
+            e.window.absorb_delta(new_states[e.name])
+        self.stats["flush_s"] += time.perf_counter() - t0
+
+    def flush(self) -> None:
+        """Drain every group's ingest buffer into the windows."""
+        for group_id in list(self._pipelines):
+            self._flush_group(group_id)
+
+    # -- windowing ------------------------------------------------------
+    def advance_epoch(self, name: str | None = None) -> None:
+        """Close the open epoch (flushing first so the epoch boundary is
+        exact); expired epochs are subtracted out of their windows."""
+        self.flush()
+        entries = (self.registry.streams() if name is None
+                   else [self.registry.stream(name)])
+        for e in entries:
+            e.window.advance_epoch()
+        self.stats["epochs"] += 1
+
+    # -- queries --------------------------------------------------------
+    def snapshot(self, names: list[str] | None = None) -> Snapshot:
+        self.flush()
+        self.stats["snapshots"] += 1
+        return self.engine.snapshot(names)
+
+    def register_continuous(self, query: ContinuousQuery) -> None:
+        if query.name in self._continuous:
+            raise ValueError(f"continuous query {query.name!r} already exists")
+        # validate eagerly: unknown streams / non-joinable pairs fail here,
+        # not at poll time
+        for s in query.streams:
+            self.registry.stream(s)
+        if query.kind == "join":
+            self.registry.require_joinable(*query.streams)
+        self._continuous[query.name] = query
+
+    def poll(self) -> dict[str, QueryResult | dict[int, QueryResult]]:
+        """Evaluate every continuous query against ONE shared snapshot."""
+        snap = self.snapshot()
+        self.stats["polls"] += 1
+        return {name: q.evaluate(snap) for name, q in self._continuous.items()}
+
+    # -- introspection --------------------------------------------------
+    def describe(self) -> dict:
+        groups = {}
+        for g in self.registry.groups():
+            pipe = self._pipelines[g.group_id]
+            groups[g.group_id] = {
+                "cfg": dataclasses.asdict(g.cfg),
+                "streams": {e.name: {"records": e.records,
+                                     "window_epochs": e.window.window_epochs,
+                                     "live_epochs": e.window.live_epochs,
+                                     "memory_bytes": e.window.memory_bytes()}
+                            for e in self.registry.streams(g.group_id)},
+                "ingest": dict(pipe.stats),
+            }
+        return {"groups": groups, "continuous": list(self._continuous),
+                **self.stats}

@@ -1,0 +1,102 @@
+"""Sliding-window sketch state: a ring buffer of per-epoch deltas.
+
+The SJPC sketch is linear, so time-windowed semantics cost one subtraction:
+keep the cumulative counters of the live window (``total``) plus the
+per-epoch *deltas* in a ring of ``window_epochs`` slots; when an epoch
+rotates past the window edge its delta is subtracted from ``total`` and the
+slot is recycled.  Space overhead is O(window/epoch) sketch copies; queries
+read ``total`` directly -- no per-query summation over epochs.
+
+Invariants (asserted in tests/test_service.py):
+
+  W1  total == sum of the live ring slots, bit-exactly, at all times.
+  W2  after any number of rotations, total == a fresh sketch built from
+      only the live epochs' batches (same per-batch keys) -- expiry by
+      subtraction is exact, not approximate.
+  W3  total.n >= 0 and (clamp=True) estimates stay non-negative.
+
+The open (current) epoch accumulates in slot ``pos``; ``advance_epoch``
+closes it.  ``window_epochs=None`` means an unbounded (whole-stream) window
+-- no ring is kept and nothing ever expires, which degenerates to the
+original whole-stream monitor semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import sjpc
+from repro.core.sjpc import SJPCConfig, SJPCState
+
+
+class WindowedSketch:
+    """Mutable host-side wrapper around the (device-resident) window state.
+
+    All arrays stay jnp; mutation here is per-epoch bookkeeping, far off the
+    ingest hot path (which batches through service.ingest -> one jit'd
+    multi-stream dispatch and then calls :meth:`absorb_delta` once).
+    """
+
+    def __init__(self, cfg: SJPCConfig, init_state: SJPCState,
+                 window_epochs: int | None = None):
+        assert window_epochs is None or window_epochs >= 1
+        self.cfg = cfg
+        self.window_epochs = window_epochs
+        self.total = init_state
+        self.epoch = 0                      # index of the open epoch
+        if window_epochs is not None:
+            shape = (window_epochs,) + tuple(init_state.counters.shape)
+            self._ring_counters = jnp.zeros(shape, jnp.int32)
+            self._ring_n = jnp.zeros((window_epochs,), jnp.float32)
+            self._pos = 0                   # slot of the open epoch
+            self._live = 1                  # live epochs incl. the open one
+
+    # ------------------------------------------------------------------
+    def absorb_delta(self, new_state: SJPCState) -> None:
+        """Commit the post-ingest cumulative state; the delta vs the previous
+        total is credited to the open epoch's ring slot."""
+        if self.window_epochs is not None:
+            d_counters = new_state.counters - self.total.counters
+            d_n = new_state.n - self.total.n
+            self._ring_counters = self._ring_counters.at[self._pos].add(d_counters)
+            self._ring_n = self._ring_n.at[self._pos].add(d_n)
+        self.total = new_state
+
+    def advance_epoch(self) -> None:
+        """Close the open epoch.  If the ring is full, the oldest epoch's
+        delta is subtracted from ``total`` (expiry-by-subtraction)."""
+        self.epoch += 1
+        if self.window_epochs is None:
+            return
+        self._pos = (self._pos + 1) % self.window_epochs
+        if self._live < self.window_epochs:
+            self._live += 1
+        else:
+            # the slot we are about to reuse holds the expiring epoch
+            expired = SJPCState(counters=self._ring_counters[self._pos],
+                                n=self._ring_n[self._pos],
+                                step=self.total.step)
+            self.total = sjpc.subtract(self.total, expired)
+        self._ring_counters = self._ring_counters.at[self._pos].set(0)
+        self._ring_n = self._ring_n.at[self._pos].set(0.0)
+
+    # ------------------------------------------------------------------
+    def window_state(self) -> SJPCState:
+        """The SJPC state of exactly the live window (W1: == ring sum)."""
+        return self.total
+
+    @property
+    def live_epochs(self) -> int:
+        return self._live if self.window_epochs is not None else self.epoch + 1
+
+    def ring_sum(self) -> SJPCState:
+        """Recompute total from the ring (diagnostics / invariant W1)."""
+        assert self.window_epochs is not None, "unbounded window has no ring"
+        return SJPCState(counters=self._ring_counters.sum(axis=0),
+                         n=self._ring_n.sum(),
+                         step=self.total.step)
+
+    def memory_bytes(self) -> int:
+        base = self.cfg.counters_bytes
+        if self.window_epochs is None:
+            return base
+        return base * (1 + self.window_epochs)

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec
 
-from repro import configs
+from repro import compat, configs
 from repro.models import model as M
 from repro.models.config import compute_dims
 from repro.models.layers import split_tree
@@ -54,7 +54,7 @@ def test_train_step_runs_on_debug_mesh():
         "labels": jnp.asarray(np.random.default_rng(1).integers(
             0, cfg.vocab_size, size=(4, 32), dtype=np.int32)),
     }
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state2, metrics = jax.jit(step_fn)(state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert int(state2.step) == 1
