@@ -93,38 +93,68 @@ def variants_table(rows):
 
 
 def service_table(res):
-    """The `service` suite: ingest throughput vs tenant count + query latency."""
+    """The `service` suite: fused/reference ingest throughput, shard
+    scaling, and query latency.
+
+    Tolerant by construction: every row key is optional (service-only runs,
+    pre-fused results files, and partial reruns all collate), and rows are
+    emitted in a FIXED key order so two reports diff cleanly."""
     svc = res.get("service")
-    if not svc:
+    if not isinstance(svc, dict) or not svc:
         return ""
     out = ["#### Service — batched multi-tenant ingest / query latency\n",
-           "| tenants | records | dispatch rounds | records/sec |",
-           "|---|---|---|---|"]
-    ingest = sorted((row for key, row in svc.items()
-                     if key.startswith("ingest_")),
-                    key=lambda r: int(r["tenants"]))
-    for row in ingest:
-        out.append(f"| {row['tenants']} | {row['records']} | {row['rounds']} "
-                   f"| {float(row['records_per_sec']):.0f} |")
-    q = svc.get("query")
-    if q:
+           "| row | tenants | shards | records | records/sec |",
+           "|---|---|---|---|---|"]
+    # stable order: ingest rows sorted (fused?, tenants, key), then executor
+    # rows sorted by shard count -- NOT dict insertion order
+    ingest = sorted(
+        ((key, row) for key, row in svc.items()
+         if key.startswith("ingest_") and isinstance(row, dict)),
+        key=lambda kv: (bool(kv[1].get("fused", True)),
+                        int(kv[1].get("tenants", 0)), kv[0]))
+    executor = sorted(
+        ((key, row) for key, row in svc.items()
+         if key.startswith("executor_") and isinstance(row, dict)),
+        key=lambda kv: int(kv[1].get("shards", 0)))
+    for key, row in ingest + executor:
+        rps = row.get("records_per_sec")
         out.append(
-            f"\nsnapshot poll over {q['continuous_queries']} standing queries: "
-            f"p50 {float(q['poll_p50_ms']):.1f} ms, "
-            f"p95 {float(q['poll_p95_ms']):.1f} ms "
-            f"({float(q['per_query_p50_ms']):.2f} ms/query)")
+            f"| {key} | {row.get('tenants', '-')} "
+            f"| {row.get('shards', '-')} | {row.get('records', '-')} "
+            f"| {float(rps):.0f} |" if rps is not None else
+            f"| {key} | - | - | - | - |")
+    speedup = svc.get("speedup_fused_vs_ref_1t")
+    if speedup is not None:
+        out.append(f"\nfused vs reference ingest (1 tenant): "
+                   f"{float(speedup):.2f}x")
+    q = svc.get("query")
+    if isinstance(q, dict) and q:
+        out.append(
+            f"\nsnapshot poll over {q.get('continuous_queries', '?')} "
+            f"standing queries: "
+            f"p50 {float(q.get('poll_p50_ms', 0)):.1f} ms, "
+            f"p95 {float(q.get('poll_p95_ms', 0)):.1f} ms "
+            f"({float(q.get('per_query_p50_ms', 0)):.2f} ms/query)")
     return "\n".join(out)
 
 
 def paper_tables(results_path):
+    """Markdown for whatever suites are present in results.json.
+
+    Any subset of suites collates (service-only runs, kernel-only runs, a
+    stale file from an older revision); each block renders its rows in
+    sorted key order so reruns produce diffable reports."""
     if not os.path.exists(results_path):
         return "(run `python -m benchmarks.run` first)"
-    with open(results_path) as f:
-        res = json.load(f)
+    try:
+        with open(results_path) as f:
+            res = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"(unreadable results.json: {e})"
     out = []
-    if "table3" in res:
+    if isinstance(res.get("table3"), dict):
         out.append("#### Table 3 analogue — accumulative pair counts (exact)\n")
-        for ds, row in res["table3"].items():
+        for ds, row in sorted(res["table3"].items()):
             out.append(f"- **{ds}**: " + ", ".join(
                 f"s≥{s}: {float(v):.0f}" for s, v in sorted(row.items())))
     for name, title in [("fig4_6", "Figs 4–6 — offline error (mean±std)"),
@@ -133,11 +163,15 @@ def paper_tables(results_path):
                         ("fig9b", "Fig 9b — error vs dimensionality"),
                         ("fig9c", "Fig 9c — error vs dataset size"),
                         ("fig10", "Fig 10 — running time scaling")]:
-        if name not in res:
+        if not isinstance(res.get(name), dict):
             continue
         out.append(f"\n#### {title}\n")
-        for k, v in res[name].items():
-            out.append(f"- {k}: " + json.dumps(v))
+        for k, v in sorted(res[name].items()):
+            out.append(f"- {k}: " + json.dumps(v, sort_keys=True))
+    if isinstance(res.get("kernels"), dict):
+        out.append("\n#### Kernel micro-bench (interpret-mode conformance)\n")
+        for k, v in sorted(res["kernels"].items()):
+            out.append(f"- {k}: " + json.dumps(v, sort_keys=True))
     svc = service_table(res)
     if svc:
         out.append("\n" + svc)

@@ -54,11 +54,26 @@ def bench_kernels():
 
 
 def bench_service():
-    """Estimation-service numbers: batched ingest throughput as tenant count
-    grows (1/4/16 streams sharing one hash group -> one dispatch per round)
-    and snapshot query latency (p50/p95).  These are the service-side perf
-    trajectory; kernel-level wins show up here as records/sec."""
+    """Estimation-service numbers: fused vs reference ingest, tenant
+    scaling, shard scaling, and snapshot query latency (p50/p95).
+
+    Rows:
+      ingest_ref_1t          reference (per-level, unfused) update running
+                             inside the SAME scan'd pipeline -- the
+                             conformance oracle.  speedup_fused_vs_ref_1t
+                             therefore isolates the fused-update win only;
+                             the full delta vs the PR 1 per-round-dispatch
+                             pipeline is the cross-commit records/sec
+                             comparison of this row's history.
+      ingest_fused_{S}t      fused path (one scan'd dispatch per flush,
+                             fused fingerprint->sketch update), 1/4/16
+                             tenants
+      executor_{K}sh         core ShardedIngest executor at 1/2/4 shards
+                             (shard_map over the device mesh when the host
+                             exposes enough devices; deferred merge)
+    """
     import jax
+    from repro.core import sjpc
     from repro.core.sjpc import SJPCConfig
     from repro.service import ContinuousQuery, EstimationService, ServiceConfig
 
@@ -66,40 +81,52 @@ def bench_service():
     rng = np.random.default_rng(0)
     out = {}
     records_per_tenant = 4096
-    for tenants in (1, 4, 16):
-        svc = EstimationService(ServiceConfig(batch_rows=512, window_epochs=4))
+
+    def run_pipeline(tenants, *, use_fused, tag):
+        svc = EstimationService(ServiceConfig(batch_rows=512, window_epochs=4,
+                                              use_fused=use_fused))
         svc.create_group("g", cfg)
         names = [f"t{i}" for i in range(tenants)]
         for nm in names:
             svc.create_stream(nm, "g")
         batches = {nm: rng.integers(0, 1000, size=(records_per_tenant, cfg.d),
                                     dtype=np.uint32) for nm in names}
+
         def _block():
             # flush() enqueues async dispatches; time the compute, not the
             # enqueue (as bench_kernels does)
             jax.block_until_ready([svc.registry.stream(nm).window.total.counters
                                    for nm in names])
 
-        # warmup: compile the (S, batch_rows) executable
+        # warmup: compile the (R, S, batch_rows) executable at the SAME
+        # round count the measured flushes use (the scan'd dispatch is
+        # shape-specialized on R)
         for nm in names:
-            svc.ingest(nm, batches[nm][:512])
+            svc.ingest(nm, batches[nm])
         svc.flush()
         _block()
+        cycles = 3
         t0 = time.time()
-        for nm in names:
-            svc.ingest(nm, batches[nm][512:])
-        svc.flush()
+        for _ in range(cycles):
+            for nm in names:
+                svc.ingest(nm, batches[nm])
+            svc.flush()
         _block()
         dt = time.time() - t0
-        total = (records_per_tenant - 512) * tenants
-        out[f"ingest_{tenants}t"] = {
-            "tenants": tenants, "records": total, "seconds": dt,
-            "records_per_sec": total / dt,
+        total = records_per_tenant * tenants * cycles
+        out[tag] = {
+            "tenants": tenants, "fused": use_fused, "records": total,
+            "seconds": dt, "records_per_sec": total / dt,
             "rounds": svc.describe()["groups"]["g"]["ingest"]["rounds"],
         }
-        print(f"ingest {tenants:>2} tenants: {total / dt:>10.0f} records/s "
+        print(f"{tag:>18}: {total / dt:>10.0f} records/s "
               f"({total} records, {dt:.2f}s)")
+        return svc, names
 
+    run_pipeline(1, use_fused=False, tag="ingest_ref_1t")
+    for tenants in (1, 4, 16):
+        svc, names = run_pipeline(tenants, use_fused=True,
+                                  tag=f"ingest_fused_{tenants}t")
         if tenants == 4:
             for nm in names:
                 svc.register_continuous(
@@ -122,6 +149,83 @@ def bench_service():
             print(f"poll ({tenants + 1} standing queries): "
                   f"p50 {out['query']['poll_p50_ms']:.1f}ms "
                   f"p95 {out['query']['poll_p95_ms']:.1f}ms")
+
+    out["speedup_fused_vs_ref_1t"] = (
+        out["ingest_fused_1t"]["records_per_sec"]
+        / out["ingest_ref_1t"]["records_per_sec"])
+    print(f"fused vs reference (1 tenant): "
+          f"{out['speedup_fused_vs_ref_1t']:.2f}x")
+
+    # --- core sharded executor: 1/2/4 shards, deferred merge -------------
+    # shard_map needs >1 device; rather than force a multi-device host
+    # platform on THIS process (which would split the XLA:CPU thread pool
+    # and slow every other row), the executor rows run in a subprocess
+    # with --xla_force_host_platform_device_count=4 when the current
+    # backend is single-device CPU.
+    if jax.device_count() >= 4:
+        out.update(_executor_rows())
+    else:
+        import subprocess
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4").strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(os.path.dirname(HERE), "src"),
+                        env.get("PYTHONPATH")) if p)
+        proc = subprocess.run(
+            [sys.executable, "-c",
+             "import json, sys, os; sys.path.insert(0, os.environ['_BENCH_DIR']);"
+             "from run import _executor_rows;"
+             "print('EXECUTOR_JSON ' + json.dumps(_executor_rows()))"],
+            env={**env, "_BENCH_DIR": HERE}, capture_output=True, text=True)
+        rows = {}
+        for line in proc.stdout.splitlines():
+            if line.startswith("EXECUTOR_JSON "):
+                rows = json.loads(line[len("EXECUTOR_JSON "):])
+            else:
+                print(line)
+        if not rows:
+            print(f"executor subprocess failed:\n{proc.stderr[-2000:]}")
+        out.update(rows)
+    return out
+
+
+def _executor_rows():
+    """ShardedIngest throughput at 1/2/4 shards (run where >= 4 devices
+    exist; on CPU the service bench spawns this in a forced-multi-device
+    subprocess)."""
+    import jax
+    from repro.core import sjpc
+    from repro.core.sjpc import SJPCConfig
+
+    cfg = SJPCConfig(d=6, s=4, ratio=0.5, width=1024, depth=3, seed=11)
+    rng = np.random.default_rng(0)
+    params, _ = sjpc.init(cfg)
+    micro, n_micro = 2048, 24
+    batches = [rng.integers(0, 1000, size=(micro, cfg.d), dtype=np.uint32)
+               for _ in range(n_micro)]
+    out = {}
+    for shards in (1, 2, 4):
+        sh = sjpc.ShardedIngest(cfg, params, num_shards=shards)
+        sh.ingest(batches[0])                # warmup/compile
+        jax.block_until_ready(sh.deltas.counters)
+        sh.reset()                           # keep the compiled step fn
+        t0 = time.time()
+        for b in batches:
+            sh.ingest(b)
+        merged = sh.merged()
+        jax.block_until_ready(merged.counters)
+        dt = time.time() - t0
+        total = micro * n_micro
+        out[f"executor_{shards}sh"] = {
+            "shards": shards, "mapped": sh.mapped,
+            "records": total, "seconds": dt, "records_per_sec": total / dt,
+            "micro_batches": n_micro, "merges": sh.merges,
+        }
+        print(f"executor {shards} shard(s) "
+              f"({'shard_map' if sh.mapped else 'vmap'}): "
+              f"{total / dt:>10.0f} records/s ({n_micro} micro-batches, "
+              f"1 merge)")
     return out
 
 
@@ -163,7 +267,16 @@ def main(argv):
     os.makedirs(OUT_DIR, exist_ok=True)
     from benchmarks import paper_benchmarks as PB
     names = argv or (list(PB.ALL) + ["kernels", "service", "roofline"])
+    results_path = os.path.join(OUT_DIR, "results.json")
+    # merge into prior results so a partial run (e.g. `run service`) never
+    # drops the other suites' rows from the collated report
     results = {}
+    if os.path.exists(results_path):
+        try:
+            with open(results_path) as f:
+                results = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            results = {}
     for name in names:
         print(f"\n=== {name} ===")
         t0 = time.time()
@@ -176,9 +289,9 @@ def main(argv):
         else:
             results[name] = PB.ALL[name]()
         print(f"[{name}: {time.time() - t0:.1f}s]")
-    with open(os.path.join(OUT_DIR, "results.json"), "w") as f:
+    with open(results_path, "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print(f"\nresults -> {os.path.join(OUT_DIR, 'results.json')}")
+    print(f"\nresults -> {results_path}")
 
 
 if __name__ == "__main__":

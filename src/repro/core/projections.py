@@ -18,6 +18,7 @@ TPU by a wide margin.
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import math
 from typing import NamedTuple
@@ -56,6 +57,78 @@ def lattice(d: int, s: int) -> list[LevelCombos]:
     return [level_combinations(d, k) for k in range(s, d + 1)]
 
 
+class PaddedLattice(NamedTuple):
+    """All levels s..d stacked into one rectangular table.
+
+    Every level is padded to ``m_max = max_k C(d, k)`` combinations so the
+    whole lattice becomes dense (L, m_max, ...) arrays -- the layout the
+    fused ingest kernel (one launch for every level) consumes.  Padded
+    combination slots carry ``valid == 0``; the sampling step multiplies
+    weights by ``valid`` so padded slots can never contribute to a sketch.
+    """
+    d: int
+    s: int
+    masks: np.ndarray      # (L, m_max, d) uint32 in {0,1}
+    ids: np.ndarray        # (L, m_max) uint32 (0 in padded slots)
+    valid: np.ndarray      # (L, m_max) uint32 in {0,1}
+    nums: tuple            # true C(d, k) per level
+
+    @property
+    def num_levels(self) -> int:
+        return self.masks.shape[0]
+
+    @property
+    def m_max(self) -> int:
+        return self.masks.shape[1]
+
+
+class ConcatLattice(NamedTuple):
+    """All levels s..d concatenated along the combination axis (no padding).
+
+    The fast pure-jnp fused update uses this layout: one masked-Horner
+    fingerprint pass over all ``m_total = sum_k C(d, k)`` combinations and
+    one flat scatter into the (L, t, w) counter block, with per-combination
+    hash coefficients gathered via ``level_of``.
+    """
+    d: int
+    s: int
+    masks: np.ndarray      # (m_total, d) uint32 in {0,1}
+    ids: np.ndarray        # (m_total,) uint32
+    level_of: np.ndarray   # (m_total,) int32 level index (0 = level s)
+    nums: tuple            # C(d, k) per level; offsets are cumulative
+
+    @property
+    def m_total(self) -> int:
+        return self.masks.shape[0]
+
+
+@functools.lru_cache(maxsize=None)
+def concat_lattice(d: int, s: int) -> ConcatLattice:
+    levels = lattice(d, s)
+    masks = np.concatenate([lv.masks for lv in levels], axis=0)
+    ids = np.concatenate([lv.ids for lv in levels], axis=0)
+    level_of = np.concatenate(
+        [np.full((lv.num,), i, dtype=np.int32) for i, lv in enumerate(levels)])
+    return ConcatLattice(d=d, s=s, masks=masks, ids=ids, level_of=level_of,
+                         nums=tuple(lv.num for lv in levels))
+
+
+@functools.lru_cache(maxsize=None)
+def padded_lattice(d: int, s: int) -> PaddedLattice:
+    levels = lattice(d, s)
+    m_max = max(lv.num for lv in levels)
+    L = len(levels)
+    masks = np.zeros((L, m_max, d), dtype=np.uint32)
+    ids = np.zeros((L, m_max), dtype=np.uint32)
+    valid = np.zeros((L, m_max), dtype=np.uint32)
+    for i, lv in enumerate(levels):
+        masks[i, :lv.num] = lv.masks
+        ids[i, :lv.num] = lv.ids
+        valid[i, :lv.num] = 1
+    return PaddedLattice(d=d, s=s, masks=masks, ids=ids, valid=valid,
+                         nums=tuple(lv.num for lv in levels))
+
+
 def sample_size_parts(num_combos: int, ratio: float) -> tuple[int, float]:
     """(floor, frac) of the stochastically rounded sample size r*M."""
     target = num_combos * ratio
@@ -65,6 +138,31 @@ def sample_size_parts(num_combos: int, ratio: float) -> tuple[int, float]:
         frac = 0.0
     lo = min(lo, num_combos)
     return lo, frac
+
+
+# Below this combination count, descending ranks are computed by pairwise
+# comparison counting (O(M^2) vectorized ops) instead of a double argsort
+# (O(M log M) but ~6x slower in XLA:CPU at SJPC's practical M).  Both
+# produce identical ranks (ties broken by index, matching stable argsort),
+# so the switch never changes sampled weights.
+_RANK_BY_COMPARISON_MAX_M = 64
+
+
+def descending_ranks(scores: jax.Array) -> jax.Array:
+    """Rank (0 = largest) of each entry along the last axis, ties by index.
+
+    Bit-identical to ``argsort(argsort(-scores))`` with stable sorts:
+    rank_j = #{k : s_k > s_j} + #{k < j : s_k == s_j}.
+    """
+    m = scores.shape[-1]
+    if m > _RANK_BY_COMPARISON_MAX_M:
+        return jnp.argsort(jnp.argsort(-scores, axis=-1), axis=-1).astype(jnp.int32)
+    sk_ = scores[..., None, :]                  # k runs along the last axis
+    sj = scores[..., :, None]
+    earlier = jnp.tril(jnp.ones((m, m), jnp.int32), k=-1)   # [k < j]
+    gt = (sk_ > sj).astype(jnp.int32)
+    eq = (sk_ == sj).astype(jnp.int32)
+    return jnp.sum(gt + eq * earlier, axis=-1).astype(jnp.int32)
 
 
 def sample_combo_weights(key: jax.Array, batch: int, num_combos: int, ratio: float):
@@ -80,8 +178,7 @@ def sample_combo_weights(key: jax.Array, batch: int, num_combos: int, ratio: flo
     k_sel, k_round = jax.random.split(key)
     scores = jax.random.uniform(k_sel, (batch, num_combos))
     # rank of each combo among this record's scores (0 = largest)
-    order = jnp.argsort(-scores, axis=-1)
-    ranks = jnp.argsort(order, axis=-1)
+    ranks = descending_ranks(scores)
     l_i = jnp.full((batch, 1), lo, dtype=jnp.int32)
     if frac > 0.0:
         l_i = l_i + (jax.random.uniform(k_round, (batch, 1)) < frac).astype(jnp.int32)

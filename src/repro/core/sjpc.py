@@ -23,6 +23,7 @@ product and the inversion drops the self-pair term.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import NamedTuple, Sequence
 
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 from . import projections as proj
 from . import sketch as sk
 from .fingerprint import make_fingerprint_bases, subvalue_fingerprints
+from .hashing import cw_hash_pair, hash_bucket, hash_sign
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +135,86 @@ def update(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
     )
 
 
+def _sample_level_weights(cfg: SJPCConfig, key: jax.Array, batch: int,
+                          row_mask: jax.Array | None):
+    """Per-level (B, C(d,k)) sampling weights, exactly as ``update`` draws
+    them (same fold-in order, same uniforms) -- the fused paths reuse this so
+    they stay bit-identical to the reference path under a shared key."""
+    weights = []
+    for idx, level in enumerate(_level_tables(cfg)):
+        lkey = jax.random.fold_in(key, idx)
+        w = proj.sample_combo_weights(lkey, batch, level.num, cfg.ratio)
+        if row_mask is not None:
+            w = w * row_mask[:, None]
+        weights.append(w)
+    return weights
+
+
+def update_fused(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
+                 key: jax.Array | None = None, *,
+                 row_mask: jax.Array | None = None,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None) -> SJPCState:
+    """``update``, but as the fused ingest hot path.
+
+    Same contract and **bit-identical counters** as :func:`update` given the
+    same ``key`` (asserted in tests/test_fused_ingest.py); the difference is
+    execution shape.  On TPU backends (or ``use_pallas=True``) the whole
+    record batch runs through the fused Pallas kernel -- fingerprints
+    produced in VMEM feed the one-hot MXU contraction directly, one launch
+    for every lattice level.  Elsewhere it runs the fused pure-jnp
+    formulation: ONE masked-Horner fingerprint pass over the concatenated
+    combination table and ONE scatter into the flattened (L, t, w) counter
+    block (per-combination hash coefficients gathered by level), which
+    replaces the per-level chain of 2L+L dispatching ops of the reference
+    path with 3 large ones.
+    """
+    values = jnp.asarray(values).astype(jnp.uint32)
+    B = values.shape[0]
+    if key is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ 0xC0FFEE), state.step)
+    if row_mask is not None:
+        row_mask = jnp.asarray(row_mask).astype(jnp.int32).reshape(B)
+    level_weights = _sample_level_weights(cfg, key, B, row_mask)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    if use_pallas:
+        from repro.kernels.fused_ingest import fused_ingest_pallas
+        pad = proj.padded_lattice(cfg.d, cfg.s)
+        wpad = jnp.stack(
+            [jnp.pad(w, ((0, 0), (0, pad.m_max - w.shape[1])))
+             for w in level_weights], axis=1)                    # (B, L, m_max)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        counters = fused_ingest_pallas(
+            state.counters, values, jnp.asarray(pad.masks),
+            jnp.asarray(pad.ids), params.fp_bases,
+            params.bucket_coeffs, params.sign_coeffs, wpad,
+            interpret=interpret)
+    else:
+        cat = proj.concat_lattice(cfg.d, cfg.s)
+        t, w = cfg.depth, cfg.width
+        fp1, fp2 = subvalue_fingerprints(
+            values, jnp.asarray(cat.masks), jnp.asarray(cat.ids),
+            params.fp_bases)                                     # (B, m_total)
+        wcat = jnp.concatenate(level_weights, axis=1)            # (B, m_total)
+        level_of = jnp.asarray(cat.level_of)                     # (m_total,)
+        # per-combination coefficients, depth-major for broadcasting:
+        # (t, 1, m_total, 2, 4) against fp (B, m_total) -> hashes (t, B, m_total)
+        bcoef = jnp.moveaxis(params.bucket_coeffs[level_of], 1, 0)[:, None]
+        scoef = jnp.moveaxis(params.sign_coeffs[level_of], 1, 0)[:, None]
+        bucket = hash_bucket(cw_hash_pair(fp1, fp2, bcoef), w)
+        sign = hash_sign(cw_hash_pair(fp1, fp2, scoef)) * wcat[None]
+        plane = level_of[None, None, :] * t + jnp.arange(t, dtype=jnp.int32)[:, None, None]
+        counters = (state.counters.reshape(-1)
+                    .at[plane * w + bucket].add(sign)
+                    .reshape(state.counters.shape))
+
+    n_new = jnp.float32(B) if row_mask is None else row_mask.sum().astype(jnp.float32)
+    return SJPCState(counters=counters, n=state.n + n_new, step=state.step + 1)
+
+
 def merge(a: SJPCState, b: SJPCState) -> SJPCState:
     """Linearity: sketches of disjoint sub-streams add.
 
@@ -169,6 +251,161 @@ def all_reduce(state: SJPCState, axis_names) -> SJPCState:
         n=jax.lax.psum(state.n, axis_names),
         step=state.step,
     )
+
+
+_SHARD_SALT = 0x5A4D
+
+
+class ShardedIngest:
+    """Device-sharded ingest executor with deferred merges.
+
+    Exploits sketch linearity for data parallelism: each record micro-batch
+    is split across ``num_shards`` shards, every shard folds its slice into a
+    shard-local *delta* sketch, and no cross-shard communication happens on
+    the ingest path at all.  ``merged()`` pays the single cross-device
+    reduction (``lax.psum`` semantics, executed as one sum over the shard
+    axis) for however many micro-batches were absorbed since construction --
+    N micro-batches cost one reduction, not N.
+
+    When the runtime exposes at least ``num_shards`` devices the per-shard
+    update runs inside :func:`repro.compat.shard_map` over a 1-D 'shards'
+    mesh with the delta states and record slices sharded on the leading
+    axis; with fewer devices the identical computation runs as a ``vmap``
+    over the shard axis (bit-identical counters -- the update is integer
+    arithmetic, so tests exercise either path interchangeably).
+
+    Per-shard sampling keys are ``fold_in(batch_key, shard)``; replaying the
+    same slices with the same keys through plain :func:`update` rebuilds any
+    shard bit-exactly (the conformance contract, see tests).
+    """
+
+    def __init__(self, cfg: SJPCConfig, params: SJPCParams,
+                 state: SJPCState | None = None, *, num_shards: int | None = None,
+                 use_fused: bool = True, use_pallas: bool | None = None,
+                 interpret: bool | None = None, devices=None):
+        devices = list(devices if devices is not None else jax.local_devices())
+        self.num_shards = int(num_shards or len(devices))
+        assert self.num_shards >= 1
+        self.cfg, self.params = cfg, params
+        self.base = state if state is not None else init(cfg)[1]
+        self.use_fused = use_fused
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.micro_batches = 0
+        self.merges = 0
+
+        self._mesh = None
+        if self.num_shards > 1 and len(devices) >= self.num_shards:
+            from jax.sharding import Mesh
+            self._mesh = Mesh(np.asarray(devices[:self.num_shards]), ("shards",))
+        self.deltas = self._zero_deltas()
+        self._step_fn = self._build_step_fn()
+
+    @property
+    def mapped(self) -> bool:
+        """True when shard updates run under shard_map on a device mesh
+        (False: single-device vmap with identical numbers)."""
+        return self._mesh is not None
+
+    def _zero_deltas(self) -> SJPCState:
+        zeros = SJPCState(
+            counters=jnp.zeros((self.num_shards,) + tuple(self.base.counters.shape),
+                               jnp.int32),
+            n=jnp.zeros((self.num_shards,), jnp.float32),
+            step=jnp.zeros((self.num_shards,), jnp.int32))
+        if self._mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            shard = NamedSharding(self._mesh, P("shards"))
+            zeros = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, shard), zeros)
+        return zeros
+
+    def reset(self, base: SJPCState | None = None) -> None:
+        """Drop accumulated deltas (and optionally rebase), keeping the
+        compiled step function -- unlike constructing a fresh executor."""
+        if base is not None:
+            self.base = base
+        self.deltas = self._zero_deltas()
+        self.micro_batches = 0
+
+    # ------------------------------------------------------------------
+    def _build_step_fn(self):
+        cfg, params = self.cfg, self.params
+        update_one = functools.partial(
+            update_fused if self.use_fused else update, cfg, params)
+        kwargs = ({"use_pallas": self.use_pallas, "interpret": self.interpret}
+                  if self.use_fused else {})
+
+        def shard_step(delta, values, row_mask, key):
+            return update_one(delta, values, key=key, row_mask=row_mask, **kwargs)
+
+        if self._mesh is None:
+            def step(deltas, values, row_mask, keys):
+                return jax.vmap(shard_step)(deltas, values, row_mask, keys)
+            return jax.jit(step)
+
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+
+        def local(deltas, values, row_mask, keys):
+            # local views carry a leading shard axis of size 1
+            st = shard_step(
+                SJPCState(deltas.counters[0], deltas.n[0], deltas.step[0]),
+                values[0], row_mask[0], keys[0])
+            return SJPCState(st.counters[None], st.n[None], st.step[None])
+
+        step = shard_map(local, mesh=self._mesh,
+                         in_specs=(P("shards"), P("shards"), P("shards"),
+                                   P("shards")),
+                         out_specs=P("shards"), check_rep=False)
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def ingest(self, values, key: jax.Array | None = None,
+               row_mask=None) -> None:
+        """Absorb one micro-batch: split across shards, update shard-local
+        deltas, defer the merge.  values (B, d); rows pad to a shard
+        multiple with mask 0."""
+        values = np.ascontiguousarray(np.asarray(values, dtype=np.uint32))
+        B = values.shape[0]
+        if key is None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.cfg.seed ^ _SHARD_SALT),
+                self.micro_batches)
+        mask = (np.ones((B,), np.int32) if row_mask is None
+                else np.asarray(row_mask, np.int32).reshape(B))
+        pad = (-B) % self.num_shards
+        if pad:
+            values = np.pad(values, ((0, pad), (0, 0)))
+            mask = np.pad(mask, (0, pad))
+        per = values.shape[0] // self.num_shards
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(self.num_shards))
+        self.deltas = self._step_fn(
+            self.deltas,
+            jnp.asarray(values.reshape(self.num_shards, per, self.cfg.d)),
+            jnp.asarray(mask.reshape(self.num_shards, per)), keys)
+        self.micro_batches += 1
+
+    def merged(self) -> SJPCState:
+        """The single deferred cross-shard reduction: base + sum of deltas.
+
+        ``step`` follows :func:`merge` semantics (sum over shards) so
+        post-merge updates can never replay a shard's consumed fold-in keys.
+        """
+        self.merges += 1
+        return SJPCState(
+            counters=self.base.counters + self.deltas.counters.sum(axis=0),
+            n=self.base.n + self.deltas.n.sum(),
+            step=self.base.step + self.deltas.step.sum(),
+        )
+
+    def shard_key(self, micro_batch: int, shard: int) -> jax.Array:
+        """The sampling key shard ``shard`` folded in for micro-batch
+        ``micro_batch`` (the offline-replay coordinate)."""
+        base = jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.seed ^ _SHARD_SALT), micro_batch)
+        return jax.random.fold_in(base, shard)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused fingerprint -> multi-level Fast-AGMS ingest.
+
+This is Step 1 of Algorithm 1 as ONE kernel launch.  The unfused path
+(kernels/fingerprint.py + kernels/sketch_update.py) round-trips the (B, M)
+fingerprint matrix through HBM between two dispatches and launches once per
+lattice level; here every level's projection fingerprints are produced in
+VMEM and immediately contracted into that level's counters, so the record
+slab is read once and nothing intermediate ever leaves the chip:
+
+  grid (L, w_tiles, b_blocks):
+    level axis      -- parallel; each level has its own combo table, hash
+                       coefficients, and (t, w) counter plane
+    width axis      -- parallel; counters are tiled (t, block_w)
+    batch axis      -- innermost + sequential: the (t, block_w) counter tile
+                       stays resident in VMEM while every record block's
+                       contribution accumulates into it (the deferred-flush
+                       analogue of the cross-device merge deferral)
+
+  per cell:  masked-Horner fingerprints (block_b, m_max) for this level's
+             combos, flattened to a key block, then per depth row the
+             one-hot bucket matrix is contracted against sign*weight on the
+             MXU (exact in f32: products are +-1*weight and the contraction
+             length block_b*m_max << 2^24).
+
+Levels are padded to a rectangular (L, m_max) combo table; padded slots
+carry weight 0 everywhere (enforced by the caller via
+``projections.PaddedLattice.valid``), so they contribute nothing -- the
+kernel output is bit-identical to the per-level reference chain
+(asserted across remainders/depths/tiles in tests/test_fused_ingest.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import addmod_p31, cw_hash_pair, hash_sign, mulmod_p31, reduce_p31
+
+DEFAULT_BLOCK_B = 256
+DEFAULT_BLOCK_W = 1024
+
+
+def _kernel(values_ref, masks_ref, ids_ref, bases_ref, wt_ref, counters_ref,
+            bcoef_ref, scoef_ref, out_ref, *, d: int, depth: int, block_w: int):
+    gb = pl.program_id(2)
+
+    @pl.when(gb == 0)
+    def _init():
+        out_ref[...] = counters_ref[...]
+
+    # --- fingerprints for this (record block, level) pair, in VMEM --------
+    values = reduce_p31(values_ref[...])                     # (BB, d)
+    masks = masks_ref[0]                                     # (M, d)
+    seed = addmod_p31(reduce_p31(ids_ref[0]), jnp.uint32(1))  # (M,)
+    fps = []
+    for which in (0, 1):
+        base = bases_ref[which]
+        fp = jnp.broadcast_to(seed[None, :], (values.shape[0], seed.shape[0]))
+        for col in range(d):                                 # d is static
+            v = addmod_p31(values[:, col:col + 1], jnp.uint32(1))
+            nxt = addmod_p31(mulmod_p31(fp, base), v)
+            fp = jnp.where(masks[None, :, col] != 0, nxt, fp)
+        fps.append(fp.reshape(-1))
+    fp1, fp2 = fps                                           # (BB*M,) each
+
+    # --- straight into the sketch: one-hot MXU contraction per depth row --
+    weight = wt_ref[:, 0, :].reshape(-1).astype(jnp.float32)  # (BB*M,)
+    w_total = out_ref.shape[2] * pl.num_programs(1)
+    w_lo = (pl.program_id(1) * block_w).astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (fp1.shape[0], block_w), 1)
+    for i in range(depth):                                   # depth is static
+        hb = cw_hash_pair(fp1, fp2, bcoef_ref[0, i])
+        bucket = (hb & jnp.uint32(w_total - 1)).astype(jnp.int32)
+        onehot = (bucket[:, None] - w_lo == col).astype(jnp.float32)
+        sign = hash_sign(cw_hash_pair(fp1, fp2, scoef_ref[0, i])).astype(jnp.float32)
+        contrib = jnp.dot((sign * weight)[None, :], onehot,
+                          preferred_element_type=jnp.float32)    # (1, BW)
+        out_ref[0, i, :] += contrib[0].astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_w", "interpret"))
+def fused_ingest_pallas(counters, values, masks, ids, bases,
+                        bucket_coeffs, sign_coeffs, weights,
+                        *, block_b: int = DEFAULT_BLOCK_B,
+                        block_w: int = DEFAULT_BLOCK_W,
+                        interpret: bool = True):
+    """One launch: records -> fingerprints -> every level's sketch.
+
+    counters (L, t, w) int32; values (B, d) uint32; masks (L, m_max, d) /
+    ids (L, m_max) padded combo tables; bases (2,); bucket/sign_coeffs
+    (L, t, 2, 4); weights (B, L, m_max) int32 with 0 in padded slots (and in
+    masked-out rows).  Returns updated (L, t, w) counters.
+
+    ``interpret=True`` is the CPU-correctness mode (this container); on real
+    TPU pass interpret=False.
+    """
+    L, t, w = counters.shape
+    B, d = values.shape
+    m_max = ids.shape[1]
+    values = values.astype(jnp.uint32)
+    weights = weights.astype(jnp.int32)
+
+    block_b = min(block_b, max(B, 8))
+    block_w = min(block_w, w)
+    # the bucket mask `& (w_total - 1)` and the untiled-tail hazard both
+    # require power-of-two tiles that divide the (power-of-two) width
+    assert w & (w - 1) == 0, "sketch width must be a power of two"
+    assert block_w & (block_w - 1) == 0, \
+        f"block_w={block_w} must be a power of two (so it divides w={w})"
+    pad_b = (-B) % block_b
+    if pad_b:
+        values = jnp.pad(values, ((0, pad_b), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad_b), (0, 0), (0, 0)))
+    b_pad = B + pad_b
+
+    grid = (L, w // block_w, b_pad // block_b)
+    kernel = functools.partial(_kernel, d=d, depth=t, block_w=block_w)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda l, gw, gb: (gb, 0)),
+            pl.BlockSpec((1, m_max, d), lambda l, gw, gb: (l, 0, 0)),
+            pl.BlockSpec((1, m_max), lambda l, gw, gb: (l, 0)),
+            pl.BlockSpec((2,), lambda l, gw, gb: (0,)),
+            pl.BlockSpec((block_b, 1, m_max), lambda l, gw, gb: (gb, l, 0)),
+            pl.BlockSpec((1, t, block_w), lambda l, gw, gb: (l, 0, gw)),
+            pl.BlockSpec((1, t, 2, 4), lambda l, gw, gb: (l, 0, 0, 0)),
+            pl.BlockSpec((1, t, 2, 4), lambda l, gw, gb: (l, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, block_w), lambda l, gw, gb: (l, 0, gw)),
+        out_shape=jax.ShapeDtypeStruct((L, t, w), jnp.int32),
+        interpret=interpret,
+    )(values, masks, ids, bases, weights, counters, bucket_coeffs, sign_coeffs)

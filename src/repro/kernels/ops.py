@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.sketch import SketchParams
 from . import ref
 from .fingerprint import fingerprint_pallas
+from .fused_ingest import fused_ingest_pallas
 from .sketch_update import sketch_update_pallas
 from .sketch_moments import sketch_moments_pallas
 from .flash_attention import flash_attention as flash_attention_kernel
@@ -64,6 +65,33 @@ def sketch_moments(counters_a, counters_b=None, *, use_pallas=None,
         return ref.sketch_moments_ref(counters_a, counters_b)
     interpret = (not _on_tpu()) if interpret is None else interpret
     return sketch_moments_pallas(counters_a, counters_b, interpret=interpret)
+
+
+def fused_ingest(counters, values, masks, ids, bases, bucket_coeffs,
+                 sign_coeffs, weights, *, use_pallas=None, interpret=None,
+                 block_b=None, block_w=None):
+    """Fused fingerprint -> multi-level sketch ingest, one launch.
+
+    Padded-lattice layout (see ``projections.padded_lattice``): counters
+    (L, t, w), values (B, d), masks (L, m_max, d), ids (L, m_max), coeffs
+    (L, t, 2, 4), weights (B, L, m_max).  The Pallas path keeps fingerprints
+    in VMEM and counters resident across the batch grid; the fallback is the
+    unfused per-level reference chain (bit-identical output).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.fused_ingest_ref(counters, values, masks, ids, bases,
+                                    bucket_coeffs, sign_coeffs, weights)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    kwargs = {}
+    if block_b is not None:
+        kwargs["block_b"] = block_b
+    if block_w is not None:
+        kwargs["block_w"] = block_w
+    return fused_ingest_pallas(counters, values, masks, ids, bases,
+                               bucket_coeffs, sign_coeffs, weights,
+                               interpret=interpret, **kwargs)
 
 
 def make_sjpc_update_fn(*, use_pallas=None, interpret=None):

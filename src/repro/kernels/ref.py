@@ -36,6 +36,24 @@ def sketch_update_ref(counters, fp1, fp2, bucket_coeffs, sign_coeffs, weights):
     return jax.vmap(row)(counters, bucket_coeffs, sign_coeffs)
 
 
+def fused_ingest_ref(counters, values, masks, ids, bases,
+                     bucket_coeffs, sign_coeffs, weights):
+    """Padded-layout oracle for the fused ingest kernel: the unfused
+    fingerprint -> per-level scatter chain on the same rectangular tables.
+
+    counters (L, t, w) int32; values (B, d) uint32; masks (L, m_max, d);
+    ids (L, m_max); bases (2,); bucket/sign_coeffs (L, t, 2, 4); weights
+    (B, L, m_max) int32 (0 in padded combo slots and masked-out rows).
+    """
+    outs = []
+    for lvl in range(counters.shape[0]):
+        fp1, fp2 = _fp_ref(values, masks[lvl], ids[lvl], bases)
+        outs.append(sketch_update_ref(counters[lvl], fp1, fp2,
+                                      bucket_coeffs[lvl], sign_coeffs[lvl],
+                                      weights[:, lvl, :]))
+    return jnp.stack(outs)
+
+
 def sketch_moments_ref(counters_a, counters_b):
     """Row-wise inner products  sum_j A[i,j] * B[i,j]  -> (t,) float32.
 

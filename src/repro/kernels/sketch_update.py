@@ -75,6 +75,11 @@ def sketch_update_pallas(counters, fp1, fp2, bucket_coeffs, sign_coeffs, weights
 
     block_n = min(block_n, max(n, 128))
     block_w = min(block_w, w)
+    # non-divisor width tiles would leave tail columns unwritten and break
+    # the `& (w_total - 1)` bucket mask -- fail loudly instead
+    assert w & (w - 1) == 0, "sketch width must be a power of two"
+    assert block_w & (block_w - 1) == 0, \
+        f"block_w={block_w} must be a power of two (so it divides w={w})"
     pad = (-n) % block_n
     if pad:
         fp1 = jnp.pad(fp1, (0, pad))

@@ -5,7 +5,8 @@ single-dispatch ingest, and a snapshot query engine with analytical error
 bars.  See DESIGN.md §10 for the architecture and invariants.
 """
 from .client import MonitorServiceClient
-from .ingest import IngestPipeline, ingest_key, multi_stream_update
+from .ingest import (IngestPipeline, ingest_key, ingest_key_grid,
+                     multi_round_update, multi_stream_update)
 from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
 from .registry import HashGroup, StreamEntry, StreamRegistry
 from .service import EstimationService, ServiceConfig
@@ -15,5 +16,6 @@ __all__ = [
     "ContinuousQuery", "EstimationService", "HashGroup", "IngestPipeline",
     "MonitorServiceClient", "QueryEngine", "QueryResult", "ServiceConfig",
     "Snapshot", "StreamEntry", "StreamRegistry", "WindowedSketch",
-    "ingest_key", "multi_stream_update",
+    "ingest_key", "ingest_key_grid", "multi_round_update",
+    "multi_stream_update",
 ]

@@ -1,21 +1,35 @@
 """Batched ingest: double-buffered submission, fixed-shape coalescing, and
-ONE jit'd multi-stream sketch update per dispatch.
+ONE jit'd device dispatch per flush.
 
 Why batch across tenants: each tenant's trickle of records is far too small
 to saturate a device, and per-tenant dispatches pay per-call overhead S
-times.  Instead the pipeline stacks every stream of a hash group along a
-leading axis -- counters (S, levels, t, w), records (S, B, d), row masks
-(S, B), per-stream PRNG keys (S, 2) -- and vmaps the single-stream
-``sjpc.update`` over that axis inside one jit.  The inner update is the
-same code the offline estimator uses (and dispatches to the fused Pallas
-``sketch_update`` kernel on TPU backends), so one device program serves all
-tenants per round.
+times.  The pipeline stacks every stream of a hash group along a leading
+axis -- counters (S, levels, t, w), records (R, S, B, d), row masks
+(R, S, B), per-(round, stream) PRNG keys (R, S) -- and consumes ALL R
+coalesced rounds of a flush in one ``lax.scan`` inside one jit
+(:func:`multi_round_update`), vmapping the single-stream update over the
+stream axis.  The inner update is the **fused** ingest path by default
+(``sjpc.update_fused``: fingerprint -> multi-level sketch in one kernel
+launch on TPU, the fused-scatter formulation elsewhere); the original
+per-level ``sjpc.update`` stays available behind ``use_fused=False`` as the
+conformance oracle -- both produce bit-identical counters for the same keys
+(tests/test_fused_ingest.py, tests/test_service.py).
+
+Sharding: with ``shards > 1`` every round's per-stream rows are split across
+a leading shard axis and folded into shard-local *delta* sketches inside the
+scan -- no cross-shard reduction per round.  The deltas merge once per flush
+after the scan (``sjpc.merge`` semantics: counters add, steps sum), so R
+micro-batch rounds cost ONE cross-device reduction (merge deferral).  Arrays
+carrying the shard axis may be laid out across a device mesh; the shard-axis
+``sum`` is then the deferred ``psum``.  Per-shard keys are
+``fold_in(round_key, shard)``; ``shards=1`` (the default) uses the round key
+directly and is bit-compatible with the PR 1 single-device pipeline.
 
 Shapes are static: records are coalesced into rounds of exactly
 ``batch_rows`` rows per stream, the tail round padded with zero rows that
 carry row_mask 0 (contributing nothing to counters or n -- see
-``sjpc.update``).  jit therefore compiles once per (S, batch_rows) and
-every subsequent flush reuses the executable.
+``sjpc.update``).  jit compiles once per (R, S, batch_rows) and reuses the
+executable across flushes of the same shape.
 
 Double buffering: ``submit`` appends to the *front* buffer while ``flush``
 drains the *back* buffer; the buffers swap at flush start.  In-process this
@@ -50,24 +64,98 @@ def ingest_key(cfg: SJPCConfig, uid: int, round_idx: int) -> jax.Array:
     return jax.random.fold_in(jax.random.fold_in(base, uid), round_idx)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas", "interpret"))
-def multi_stream_update(cfg: SJPCConfig, params: SJPCParams, counters, n,
-                        steps, values, row_mask, keys, *, use_pallas=None,
-                        interpret=None):
-    """One device dispatch updating every stream of a group.
+@jax.jit
+def ingest_key_grid(seed, uids, round_idx) -> jax.Array:
+    """Vectorized :func:`ingest_key`: uids (S,), round_idx (R, S) ->
+    keys (R, S).  Bit-identical to the scalar function (fold_in is
+    elementwise deterministic under vmap); one dispatch instead of R*S."""
+    base = jax.random.PRNGKey(seed)
+
+    def one(uid, ridx):
+        return jax.random.fold_in(jax.random.fold_in(base, uid), ridx)
+
+    return jax.vmap(jax.vmap(one))(
+        jnp.broadcast_to(uids[None, :], round_idx.shape), round_idx)
+
+
+def _one_stream(cfg, params, use_fused, use_pallas, interpret,
+                c, n_s, step_s, vals, mask, key):
+    st = SJPCState(c, n_s, step_s)
+    if use_fused:
+        st = sjpc.update_fused(cfg, params, st, vals, key=key, row_mask=mask,
+                               use_pallas=use_pallas, interpret=interpret)
+    else:
+        st = sjpc.update(cfg, params, st, vals, key=key, row_mask=mask,
+                         update_fn=make_sjpc_update_fn(use_pallas=use_pallas,
+                                                       interpret=interpret))
+    return st.counters, st.n, st.step
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas", "interpret",
+                                             "use_fused"))
+def multi_stream_update(cfg, params, counters, n, steps, values, row_mask,
+                        keys, *, use_pallas=None, interpret=None,
+                        use_fused=False):
+    """One device dispatch updating every stream of a group (single round).
 
     counters (S, L, t, w) int32; n (S,) f32; steps (S,) int32;
     values (S, B, d) uint32; row_mask (S, B) int32; keys (S,) PRNG keys.
     Returns the updated (counters, n, steps).
     """
-    update_fn = make_sjpc_update_fn(use_pallas=use_pallas, interpret=interpret)
-
-    def one(c, n_s, step_s, vals, mask, key):
-        st = sjpc.update(cfg, params, SJPCState(c, n_s, step_s), vals,
-                         key=key, row_mask=mask, update_fn=update_fn)
-        return st.counters, st.n, st.step
-
+    one = functools.partial(_one_stream, cfg, params, use_fused, use_pallas,
+                            interpret)
     return jax.vmap(one)(counters, n, steps, values, row_mask, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas", "interpret",
+                                             "use_fused", "shards"))
+def multi_round_update(cfg, params, counters, n, steps, values, row_mask,
+                       keys, *, use_pallas=None, interpret=None,
+                       use_fused=True, shards=1):
+    """ALL rounds of a flush in one dispatch: ``lax.scan`` over the round
+    axis of values (R, S, B, d) / row_mask (R, S, B) / keys (R, S).
+
+    With ``shards > 1`` each round splits its B rows into ``shards`` slices
+    folded into shard-local delta sketches (keys ``fold_in(key, shard)``);
+    the single cross-shard merge happens after the scan -- R rounds, one
+    reduction.  Requires B % shards == 0 (the pipeline enforces it).
+    """
+    one = functools.partial(_one_stream, cfg, params, use_fused, use_pallas,
+                            interpret)
+
+    if shards == 1:
+        def body(carry, rnd):
+            vals, mask, ks = rnd
+            return jax.vmap(one)(*carry, vals, mask, ks), None
+
+        carry, _ = jax.lax.scan(body, (counters, n, steps),
+                                (values, row_mask, keys))
+        return carry
+
+    R, S, B, d = values.shape
+    assert B % shards == 0
+    per = B // shards
+    # (R, S, B, ...) -> (R, shards, S, per, ...): shard-major so the scan
+    # body vmaps (shards, S) and the shard axis can live on a device mesh.
+    vals_sh = values.reshape(R, S, shards, per, d).swapaxes(1, 2)
+    mask_sh = row_mask.reshape(R, S, shards, per).swapaxes(1, 2)
+    fold = jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(0, None)),
+                    in_axes=(0, None))
+    keys_sh = jnp.stack([fold(keys, j) for j in range(shards)], axis=1)
+
+    zeros = (jnp.zeros((shards,) + counters.shape, counters.dtype),
+             jnp.zeros((shards,) + n.shape, n.dtype),
+             jnp.zeros((shards,) + steps.shape, steps.dtype))
+
+    def body(carry, rnd):
+        vals, mask, ks = rnd
+        return jax.vmap(jax.vmap(one))(*carry, vals, mask, ks), None
+
+    (dc, dn, dstep), _ = jax.lax.scan(body, zeros,
+                                      (vals_sh, mask_sh, keys_sh))
+    # the deferred merge: ONE reduction over the shard axis for all R rounds
+    return (counters + dc.sum(axis=0), n + dn.sum(axis=0),
+            steps + dstep.sum(axis=0))
 
 
 class IngestPipeline:
@@ -76,16 +164,21 @@ class IngestPipeline:
     fixed-shape coalescing, not about lock-free concurrency)."""
 
     def __init__(self, group: HashGroup, *, batch_rows: int = 256,
-                 use_pallas: bool | None = None, interpret: bool | None = None):
-        assert batch_rows >= 1
+                 use_pallas: bool | None = None, interpret: bool | None = None,
+                 use_fused: bool = True, shards: int = 1):
+        assert batch_rows >= 1 and shards >= 1
+        assert batch_rows % shards == 0, \
+            f"batch_rows={batch_rows} must be divisible by shards={shards}"
         self.group = group
         self.batch_rows = batch_rows
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.use_fused = use_fused
+        self.shards = shards
         self._front: dict[str, list[np.ndarray]] = {}
         self._back: dict[str, list[np.ndarray]] = {}
         self.stats = {"submitted_records": 0, "flushes": 0, "rounds": 0,
-                      "padded_rows": 0, "dispatch_rows": 0}
+                      "dispatches": 0, "padded_rows": 0, "dispatch_rows": 0}
 
     # ------------------------------------------------------------------
     def submit(self, name: str, records) -> int:
@@ -127,28 +220,36 @@ class IngestPipeline:
             self.stats["flushes"] += 1
             return out
 
+        S = len(entries)
+        values = np.zeros((rounds, S, B, cfg.d), np.uint32)
+        mask = np.zeros((rounds, S, B), np.int32)
+        round_idx = np.zeros((rounds, S), np.int32)
+        for i, e in enumerate(entries):
+            rows = pending.get(e.name, np.zeros((0, cfg.d), np.uint32))
+            for r in range(rounds):
+                chunk = rows[r * B:(r + 1) * B]
+                values[r, i, :chunk.shape[0]] = chunk
+                mask[r, i, :chunk.shape[0]] = 1
+                self.stats["padded_rows"] += B - chunk.shape[0]
+            round_idx[:, i] = e.flushes + np.arange(rounds)
+            e.flushes += rounds
+            e.records += int(rows.shape[0])
+
+        keys = ingest_key_grid(
+            jnp.uint32(cfg.seed ^ _INGEST_SALT),
+            jnp.asarray([e.uid for e in entries], jnp.int32),
+            jnp.asarray(round_idx))
         counters = jnp.stack([out[e.name].counters for e in entries])
         n = jnp.stack([out[e.name].n for e in entries])
         steps = jnp.stack([out[e.name].step for e in entries])
-        for r in range(rounds):
-            values = np.zeros((len(entries), B, cfg.d), np.uint32)
-            mask = np.zeros((len(entries), B), np.int32)
-            keys = []
-            for i, e in enumerate(entries):
-                rows = pending.get(e.name,
-                                   np.zeros((0, cfg.d), np.uint32))[r * B:(r + 1) * B]
-                values[i, :rows.shape[0]] = rows
-                mask[i, :rows.shape[0]] = 1
-                keys.append(ingest_key(cfg, e.uid, e.flushes))
-                e.flushes += 1
-                e.records += int(rows.shape[0])
-                self.stats["padded_rows"] += B - rows.shape[0]
-            counters, n, steps = multi_stream_update(
-                cfg, self.group.params, counters, n, steps,
-                jnp.asarray(values), jnp.asarray(mask), jnp.stack(keys),
-                use_pallas=self.use_pallas, interpret=self.interpret)
-            self.stats["rounds"] += 1
-            self.stats["dispatch_rows"] += len(entries) * B
+        counters, n, steps = multi_round_update(
+            cfg, self.group.params, counters, n, steps,
+            jnp.asarray(values), jnp.asarray(mask), keys,
+            use_pallas=self.use_pallas, interpret=self.interpret,
+            use_fused=self.use_fused, shards=self.shards)
+        self.stats["rounds"] += rounds
+        self.stats["dispatches"] += 1
+        self.stats["dispatch_rows"] += S * B * rounds
         self.stats["flushes"] += 1
         for i, e in enumerate(entries):
             out[e.name] = SJPCState(counters[i], n[i], steps[i])

@@ -45,6 +45,8 @@ class ServiceConfig:
     auto_flush_rows: int | None = None   # flush() when a group's backlog hits this
     use_pallas: bool | None = None   # None = auto (Pallas on TPU)
     interpret: bool | None = None    # forwarded to the Pallas path
+    use_fused: bool = True           # fused ingest path; False = reference oracle
+    shards: int = 1                  # data-parallel ingest shards per round
 
 
 class EstimationService:
@@ -62,7 +64,8 @@ class EstimationService:
         group = self.registry.create_group(group_id, cfg)
         self._pipelines[group_id] = IngestPipeline(
             group, batch_rows=self.cfg.batch_rows,
-            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
+            use_fused=self.cfg.use_fused, shards=self.cfg.shards)
         return group
 
     def create_stream(self, name: str, group_id: str,

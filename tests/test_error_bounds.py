@@ -1,0 +1,103 @@
+"""Statistical guarantee suite: the estimator honors the Theorem 1/2 error
+bounds at the stated confidence -- on the FUSED ingest path, since that is
+what production traffic flows through.
+
+For several (d, s, width, depth) points we run multiple seeded trials
+(fresh hash/fingerprint draws per trial, fixed synthetic data with exact
+g_s known from ``core.exact``) and check the Chebyshev consequence of
+Theorem 2: var(G_s/g_s) <= B  implies  P(|G_s/g_s - 1| > k*sqrt(B)) <= 1/k^2.
+At k = 3 at least 8/9 of trials must land within 3*sqrt(B); we assert a
+slightly looser fraction so the (deterministic, seeded) suite is robust to
+re-calibration of shapes rather than flaky.
+
+Everything is seeded: the trials are reproducible bit-for-bit, so a failure
+here means the estimator or its bounds changed, not bad luck."""
+import math
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import exact, sjpc
+from repro.core.sjpc import SJPCConfig
+
+# (d, s, ratio, width, depth): small enough for CI, spread over the knobs
+POINTS = [
+    (4, 2, 0.5, 1024, 3),
+    (4, 2, 1.0, 512, 3),
+    (5, 3, 0.5, 2048, 3),
+    (4, 3, 0.5, 512, 5),
+]
+N_RECORDS = 1500
+TRIALS = 10
+CONF_K = 3.0            # Chebyshev multiplier: >= 8/9 of trials inside
+MIN_FRACTION = 0.8      # asserted fraction (slack below 8/9 ~ 0.889)
+
+
+def _data(d: int) -> np.ndarray:
+    rng = np.random.default_rng(2026)
+    return rng.integers(0, 6, size=(N_RECORDS, d)).astype(np.uint32)
+
+
+def _trial_estimates(cfg: SJPCConfig, values: np.ndarray) -> list[float]:
+    """g_s estimates across TRIALS independent hash draws (fused path)."""
+    out = []
+    update = jax.jit(lambda p, st, v, k: sjpc.update_fused(
+        cfg, p, st, v, key=k, use_pallas=False))
+    for trial in range(TRIALS):
+        tcfg = SJPCConfig(d=cfg.d, s=cfg.s, ratio=cfg.ratio, width=cfg.width,
+                          depth=cfg.depth, seed=cfg.seed + trial)
+        params, state = sjpc.init(tcfg)
+        state = update(params, state, values, jax.random.PRNGKey(9000 + trial))
+        out.append(sjpc.estimate(tcfg, state).g_s)
+    return out
+
+
+@pytest.mark.parametrize("d,s,ratio,width,depth", POINTS)
+def test_theorem2_bound_holds_at_stated_confidence(d, s, ratio, width, depth):
+    cfg = SJPCConfig(d=d, s=s, ratio=ratio, width=width, depth=depth, seed=100)
+    values = _data(d)
+    g = exact.exact_g(values, s)
+    assert g > 0
+    sigma = math.sqrt(sjpc.online_variance_bound(d, s, ratio, width,
+                                                 float(N_RECORDS), g))
+    rel = np.array([(est - g) / g for est in _trial_estimates(cfg, values)])
+    inside = float(np.mean(np.abs(rel) <= CONF_K * sigma))
+    assert inside >= MIN_FRACTION, (
+        f"(d={d}, s={s}, r={ratio}, w={width}, t={depth}): only "
+        f"{inside:.0%} of {TRIALS} trials within {CONF_K}*sigma "
+        f"(sigma={sigma:.3f}, rel errs={np.round(rel, 3)})")
+    # the bound should not be vacuously loose for these shapes: the mean
+    # absolute error must sit well inside one bound-sigma
+    assert float(np.mean(np.abs(rel))) <= sigma, (
+        f"mean |rel err| {np.mean(np.abs(rel)):.3f} exceeds sigma {sigma:.3f}")
+
+
+@pytest.mark.parametrize("d,s,ratio", [(4, 2, 0.5), (5, 3, 1.0)])
+def test_offline_bound_dominated_by_online(d, s, ratio):
+    """Theorem 1 (sampling only) must lower-bound Theorem 2 (sampling +
+    sketch): the sketch can only add variance."""
+    values = _data(d)
+    g = exact.exact_g(values, s)
+    off = sjpc.offline_variance_bound(d, s, ratio, g)
+    for width in (256, 1024, 4096):
+        on = sjpc.online_variance_bound(d, s, ratio, width, float(N_RECORDS), g)
+        assert on > off
+    # and the online bound tightens monotonically with width
+    bounds = [sjpc.online_variance_bound(d, s, ratio, w, float(N_RECORDS), g)
+              for w in (256, 1024, 4096)]
+    assert bounds[0] > bounds[1] > bounds[2]
+
+
+def test_estimator_concentrates_with_width():
+    """Sanity companion to the bound: empirical spread shrinks as the
+    sketch widens (holding data + trials fixed)."""
+    d, s, ratio = 4, 2, 1.0
+    values = _data(d)
+    g = exact.exact_g(values, s)
+    spreads = []
+    for width in (256, 4096):
+        cfg = SJPCConfig(d=d, s=s, ratio=ratio, width=width, depth=3, seed=300)
+        rel = np.array([(e - g) / g for e in _trial_estimates(cfg, values)])
+        spreads.append(float(np.sqrt(np.mean(rel ** 2))))
+    assert spreads[1] < spreads[0]

@@ -1,0 +1,209 @@
+"""Kernel conformance: the fused Pallas ingest (interpret mode, so it runs
+in CPU CI) must be bit-exact vs the pure-jnp reference chain across
+non-power-of-two batch remainders, depths, and width tiles -- and the whole
+``update_fused`` entry must be bit-exact vs the reference ``sjpc.update``
+for the same key (the contract the service's fast path rests on)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sjpc
+from repro.core.projections import padded_lattice
+from repro.core.sjpc import SJPCConfig
+from repro.kernels import ops, ref
+from repro.kernels.fused_ingest import fused_ingest_pallas
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(777)
+
+
+def _inputs(rng, cfg, batch):
+    params, state = sjpc.init(cfg)
+    pad = padded_lattice(cfg.d, cfg.s)
+    values = rng.integers(0, 2**32, size=(batch, cfg.d), dtype=np.uint32)
+    weights = (rng.integers(0, 2, size=(batch, pad.num_levels, pad.m_max))
+               .astype(np.int32) * pad.valid[None].astype(np.int32))
+    counters = rng.integers(-9, 9,
+                            size=(cfg.num_levels, cfg.depth, cfg.width)
+                            ).astype(np.int32)
+    return params, pad, (jnp.asarray(counters), jnp.asarray(values),
+                         jnp.asarray(pad.masks), jnp.asarray(pad.ids),
+                         params.fp_bases, params.bucket_coeffs,
+                         params.sign_coeffs, jnp.asarray(weights))
+
+
+class TestFusedKernelConformance:
+    @pytest.mark.parametrize("batch", [1, 17, 100, 257])
+    def test_batch_remainders(self, rng, batch):
+        """Non-power-of-two batches exercise the zero-padded tail block."""
+        cfg = SJPCConfig(d=5, s=3, width=256, depth=2, seed=3)
+        _, _, args = _inputs(rng, cfg, batch)
+        got = fused_ingest_pallas(*args, block_b=64, interpret=True)
+        want = ref.fused_ingest_ref(*args)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("depth", [1, 3, 5])
+    def test_depths(self, rng, depth):
+        cfg = SJPCConfig(d=4, s=2, width=256, depth=depth, seed=4)
+        _, _, args = _inputs(rng, cfg, 50)
+        got = fused_ingest_pallas(*args, interpret=True)
+        want = ref.fused_ingest_ref(*args)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("block_b,block_w", [(16, 128), (64, 256), (256, 512)])
+    def test_width_tiles(self, rng, block_b, block_w):
+        """Counters tiled along width: every tile accumulates independently
+        and the global bucket id is recovered from the tile offset."""
+        cfg = SJPCConfig(d=5, s=3, width=512, depth=3, seed=5)
+        _, _, args = _inputs(rng, cfg, 70)
+        got = fused_ingest_pallas(*args, block_b=block_b, block_w=block_w,
+                                  interpret=True)
+        want = ref.fused_ingest_ref(*args)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_padded_slots_contribute_nothing(self, rng):
+        """Zero-weight padded combo slots must not touch the counters even
+        though their fingerprints are computed."""
+        cfg = SJPCConfig(d=4, s=2, width=256, depth=2, seed=6)
+        _, pad, args = _inputs(rng, cfg, 20)
+        assert pad.m_max > min(pad.nums)          # real padding exists
+        weights = np.asarray(args[7])
+        assert (weights * (1 - pad.valid[None])).sum() == 0
+        got = fused_ingest_pallas(*args, interpret=True)
+        # garbage in the padded table slots must change nothing
+        scrambled_ids = np.array(pad.ids)
+        scrambled_ids[pad.valid == 0] = 0xDEAD
+        scrambled_masks = np.array(pad.masks)
+        scrambled_masks[pad.valid == 0] = 1
+        got2 = fused_ingest_pallas(args[0], args[1],
+                                   jnp.asarray(scrambled_masks),
+                                   jnp.asarray(scrambled_ids), *args[4:],
+                                   interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+    def test_non_pow2_width_tile_rejected(self, rng):
+        """A width tile that cannot divide the width must fail loudly, not
+        silently skip tail columns."""
+        cfg = SJPCConfig(d=4, s=2, width=512, depth=2, seed=3)
+        _, _, args = _inputs(rng, cfg, 16)
+        with pytest.raises(AssertionError, match="power of two"):
+            fused_ingest_pallas(*args, block_w=384, interpret=True)
+
+    def test_ops_dispatch(self, rng):
+        """ops.fused_ingest: reference on CPU by default, Pallas on demand."""
+        cfg = SJPCConfig(d=4, s=3, width=256, depth=2, seed=7)
+        _, _, args = _inputs(rng, cfg, 33)
+        auto = ops.fused_ingest(*args)
+        pallas = ops.fused_ingest(*args, use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(pallas))
+
+
+class TestUpdateFusedConformance:
+    """``sjpc.update_fused`` (both executions) == ``sjpc.update`` bit-exact
+    for the same key -- this is what lets the service switch paths freely."""
+
+    @pytest.mark.parametrize("ratio", [1.0, 0.5, 0.3])
+    @pytest.mark.parametrize("batch", [1, 19, 64])
+    def test_fused_jnp_matches_reference(self, rng, ratio, batch):
+        cfg = SJPCConfig(d=5, s=3, ratio=ratio, width=512, depth=3, seed=8)
+        params, s0 = sjpc.init(cfg)
+        vals = rng.integers(0, 9, size=(batch, cfg.d)).astype(np.uint32)
+        mask = (rng.random(batch) < 0.8).astype(np.int32)
+        key = jax.random.PRNGKey(55)
+        want = sjpc.update(cfg, params, s0, vals, key=key, row_mask=mask)
+        got = sjpc.update_fused(cfg, params, s0, vals, key=key, row_mask=mask,
+                                use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(got.counters),
+                                      np.asarray(want.counters))
+        assert float(got.n) == float(want.n)
+        assert int(got.step) == int(want.step)
+
+    def test_fused_pallas_matches_reference(self, rng):
+        cfg = SJPCConfig(d=5, s=3, ratio=0.5, width=256, depth=3, seed=9)
+        params, s0 = sjpc.init(cfg)
+        vals = rng.integers(0, 9, size=(41, cfg.d)).astype(np.uint32)
+        key = jax.random.PRNGKey(56)
+        want = sjpc.update(cfg, params, s0, vals, key=key)
+        got = sjpc.update_fused(cfg, params, s0, vals, key=key,
+                                use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got.counters),
+                                      np.asarray(want.counters))
+
+    def test_estimates_unchanged_by_path(self, rng):
+        """End to end: the estimate from a fused-ingested sketch equals the
+        reference path's estimate exactly."""
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=512, depth=3, seed=10)
+        params, s_ref = sjpc.init(cfg)
+        _, s_fus = sjpc.init(cfg)
+        for i in range(3):
+            vals = rng.integers(0, 6, size=(40, cfg.d)).astype(np.uint32)
+            key = jax.random.PRNGKey(i)
+            s_ref = sjpc.update(cfg, params, s_ref, vals, key=key)
+            s_fus = sjpc.update_fused(cfg, params, s_fus, vals, key=key,
+                                      use_pallas=False)
+        e_ref = sjpc.estimate(cfg, s_ref)
+        e_fus = sjpc.estimate(cfg, s_fus)
+        assert e_ref.g_s == e_fus.g_s
+        np.testing.assert_array_equal(e_ref.x, e_fus.x)
+
+
+class TestShardedIngestExecutor:
+    def test_sharded_equals_per_shard_replay(self, rng):
+        """The executor's deferred merge == manual per-shard updates with
+        the executor's own fold-in keys, merged once."""
+        cfg = SJPCConfig(d=5, s=3, ratio=0.5, width=512, depth=3, seed=11)
+        params, _ = sjpc.init(cfg)
+        sh = sjpc.ShardedIngest(cfg, params, num_shards=2,
+                                devices=jax.devices()[:1])
+        batches = [rng.integers(0, 9, size=(33, cfg.d)).astype(np.uint32)
+                   for _ in range(3)]
+        for b in batches:
+            sh.ingest(b)
+        merged = sh.merged()
+
+        acc = [sjpc.init(cfg)[1] for _ in range(2)]
+        for m, b in enumerate(batches):
+            pad = (-b.shape[0]) % 2
+            vals = np.pad(b, ((0, pad), (0, 0)))
+            mask = np.pad(np.ones(b.shape[0], np.int32), (0, pad))
+            per = vals.shape[0] // 2
+            for j in range(2):
+                acc[j] = sjpc.update(cfg, params, acc[j],
+                                     vals[j * per:(j + 1) * per],
+                                     key=sh.shard_key(m, j),
+                                     row_mask=mask[j * per:(j + 1) * per])
+        want = sjpc.merge(acc[0], acc[1])
+        np.testing.assert_array_equal(np.asarray(merged.counters),
+                                      np.asarray(want.counters))
+        assert float(merged.n) == float(want.n) == 99.0
+        assert int(merged.step) == int(want.step) == 6
+
+    def test_merge_deferral_counts(self, rng):
+        cfg = SJPCConfig(d=4, s=2, ratio=1.0, width=256, depth=2, seed=12)
+        params, _ = sjpc.init(cfg)
+        sh = sjpc.ShardedIngest(cfg, params, num_shards=4,
+                                devices=jax.devices()[:1])
+        for _ in range(5):
+            sh.ingest(rng.integers(0, 6, size=(16, cfg.d)).astype(np.uint32))
+        assert sh.micro_batches == 5 and sh.merges == 0
+        merged = sh.merged()
+        assert sh.merges == 1
+        assert float(merged.n) == 80.0
+
+    def test_ratio_one_sharding_invariant(self, rng):
+        """ratio=1 has no sampling randomness, so any shard count yields the
+        same counters as one unsharded update of the whole batch."""
+        cfg = SJPCConfig(d=4, s=2, ratio=1.0, width=256, depth=2, seed=13)
+        params, s0 = sjpc.init(cfg)
+        batch = rng.integers(0, 6, size=(48, cfg.d)).astype(np.uint32)
+        plain = sjpc.update(cfg, params, s0, batch)
+        for shards in (2, 4):
+            sh = sjpc.ShardedIngest(cfg, params, num_shards=shards,
+                                    devices=jax.devices()[:1])
+            sh.ingest(batch)
+            merged = sh.merged()
+            np.testing.assert_array_equal(np.asarray(merged.counters),
+                                          np.asarray(plain.counters))

@@ -128,6 +128,62 @@ class TestMultiStreamUpdate:
             assert float(entry.window.total.n) == float(sizes[name])
 
 
+class TestFusedServicePaths:
+    """The rewired pipeline: fused default == reference oracle bit-exactly,
+    and the sharded flush == per-shard replay with the pipeline's keys."""
+
+    def _ingest_all(self, sc, cfg, recs):
+        svc = EstimationService(sc)
+        svc.create_group("g", cfg)
+        for nm, rows in recs.items():
+            svc.create_stream(nm, "g")
+            svc.ingest(nm, rows)
+        svc.flush()
+        return svc
+
+    def test_fused_flush_equals_oracle_flush(self):
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=512, depth=2, seed=41)
+        rng = np.random.default_rng(9)
+        recs = {"a": _records(rng, 50, 4), "b": _records(rng, 20, 4)}
+        fused = self._ingest_all(
+            ServiceConfig(batch_rows=32, window_epochs=None), cfg, recs)
+        oracle = self._ingest_all(
+            ServiceConfig(batch_rows=32, window_epochs=None, use_fused=False),
+            cfg, recs)
+        for nm in recs:
+            np.testing.assert_array_equal(
+                np.asarray(fused.registry.stream(nm).window.total.counters),
+                np.asarray(oracle.registry.stream(nm).window.total.counters),
+                err_msg=nm)
+
+    def test_sharded_flush_equals_per_shard_replay(self):
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=512, depth=2, seed=43)
+        rng = np.random.default_rng(10)
+        rows = _records(rng, 50, 4)
+        svc = self._ingest_all(
+            ServiceConfig(batch_rows=32, window_epochs=None, shards=2),
+            cfg, {"a": rows})
+        entry = svc.registry.stream("a")
+        params = svc.registry.group("g").params
+        shard_states = [sjpc.init(cfg)[1] for _ in range(2)]
+        for r in range(2):                       # 50 rows -> 2 rounds of 32
+            chunk = rows[r * 32:(r + 1) * 32]
+            padded = np.zeros((32, 4), np.uint32)
+            padded[:chunk.shape[0]] = chunk
+            mask = np.zeros((32,), np.int32)
+            mask[:chunk.shape[0]] = 1
+            rkey = ingest_key(cfg, entry.uid, r)
+            for j in range(2):                   # shard j gets rows [16j, 16j+16)
+                shard_states[j] = sjpc.update(
+                    cfg, params, shard_states[j], padded[j * 16:(j + 1) * 16],
+                    key=jax.random.fold_in(rkey, j),
+                    row_mask=mask[j * 16:(j + 1) * 16])
+        want = sjpc.merge(shard_states[0], shard_states[1])
+        np.testing.assert_array_equal(
+            np.asarray(entry.window.total.counters), np.asarray(want.counters))
+        assert float(entry.window.total.n) == 50.0 == float(want.n)
+
+
 def _run_epochs(svc, cfg, name, epoch_batches):
     for rows in epoch_batches:
         if rows.shape[0]:

@@ -1,0 +1,170 @@
+"""Property tests for the sketch algebra the sharded ingest path relies on:
+merge is commutative/associative, subtract inverts merge, and updates are
+invariant under record permutation and micro-batch splitting.  These are the
+exact identities that make "split the batch across shards, defer the merge"
+a refactoring of the single-device update rather than an approximation.
+
+Uses the hypothesis stand-in from tests/conftest.py (upgraded automatically
+to real hypothesis when installed)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sjpc
+from repro.core import sketch as sk
+from repro.core.hashing import P31
+from repro.core.sjpc import SJPCConfig, SJPCState
+
+
+def _rand_state(rng, levels, t, w):
+    return SJPCState(
+        counters=jnp.asarray(rng.integers(-50, 50, size=(levels, t, w))
+                             .astype(np.int32)),
+        n=jnp.asarray(float(rng.integers(0, 100)), jnp.float32),
+        step=jnp.asarray(int(rng.integers(0, 10)), jnp.int32))
+
+
+def _eq(a: SJPCState, b: SJPCState, *, check_step=True):
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(b.counters))
+    assert float(a.n) == float(b.n)
+    if check_step:
+        assert int(a.step) == int(b.step)
+
+
+class TestMergeAlgebra:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_merge_commutative(self, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand_state(rng, 2, 3, 64), _rand_state(rng, 2, 3, 64)
+        _eq(sjpc.merge(a, b), sjpc.merge(b, a))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_merge_associative(self, seed):
+        rng = np.random.default_rng(seed)
+        a, b, c = (_rand_state(rng, 2, 3, 64) for _ in range(3))
+        _eq(sjpc.merge(sjpc.merge(a, b), c), sjpc.merge(a, sjpc.merge(b, c)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_subtract_inverts_merge(self, seed):
+        """Counters and n recover exactly; step intentionally does NOT
+        (subtract keeps the minuend's step -- PRNG history is consumed, see
+        sjpc.subtract's docstring) so it is asserted to the documented sum."""
+        rng = np.random.default_rng(seed)
+        a, b = _rand_state(rng, 2, 3, 64), _rand_state(rng, 2, 3, 64)
+        back = sjpc.subtract(sjpc.merge(a, b), b)
+        _eq(back, a, check_step=False)
+        assert int(back.step) == int(a.step) + int(b.step)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.integers(min_value=1, max_value=5))
+    def test_merge_tree_shape_irrelevant(self, seed, k):
+        """Any merge tree over k shards gives the same counters as the
+        left fold (what the deferred shard-axis sum computes)."""
+        rng = np.random.default_rng(seed)
+        states = [_rand_state(rng, 2, 2, 32) for _ in range(k + 1)]
+        left = states[0]
+        for s in states[1:]:
+            left = sjpc.merge(left, s)
+        # balanced-ish tree
+        work = list(states)
+        while len(work) > 1:
+            work = [sjpc.merge(work[i], work[i + 1]) if i + 1 < len(work)
+                    else work[i] for i in range(0, len(work), 2)]
+        _eq(left, work[0])
+
+
+class TestUpdateInvariance:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from([1, 8, 24]))
+    def test_permutation_invariance_ratio_one(self, seed, batch):
+        """ratio=1 (no per-record sampling): reordering records cannot
+        change the counters -- insertion is a commutative fold."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=4, s=2, ratio=1.0, width=128, depth=2, seed=21)
+        params, s0 = sjpc.init(cfg)
+        vals = rng.integers(0, 6, size=(batch, cfg.d)).astype(np.uint32)
+        perm = rng.permutation(batch)
+        _eq(sjpc.update(cfg, params, s0, vals),
+            sjpc.update(cfg, params, s0, vals[perm]))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_key_weight_pairs_permute_at_sketch_level(self, seed):
+        """For ratio<1 permutation invariance holds at the sketch layer:
+        permuting (key, weight) pairs together leaves counters unchanged
+        (this is why shard *assignment* of records does not matter once the
+        per-record weights are fixed)."""
+        rng = np.random.default_rng(seed)
+        t, w, n = 3, 128, 200
+        params = sk.make_sketch_params(rng, t)
+        k1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        k2 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+        wt = jnp.asarray(rng.integers(0, 2, size=n).astype(np.int32))
+        c0 = sk.empty_counters(t, w)
+        perm = rng.permutation(n)
+        a = sk.sketch_update(c0, k1, k2, params, wt)
+        b = sk.sketch_update(c0, k1[perm], k2[perm], params, wt[perm])
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from([1, 8, 17]),
+           st.sampled_from([1, 8, 17]))
+    def test_micro_batch_split_equals_merge(self, seed, b1, b2):
+        """Sequential updates from a base state == merging independently
+        sketched micro-batches (same per-batch keys): linearity, the exact
+        identity the deferred-merge executor depends on."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=128, depth=2, seed=22)
+        params, s0 = sjpc.init(cfg)
+        va = rng.integers(0, 6, size=(b1, cfg.d)).astype(np.uint32)
+        vb = rng.integers(0, 6, size=(b2, cfg.d)).astype(np.uint32)
+        ka, kb = jax.random.PRNGKey(seed % 997), jax.random.PRNGKey(seed % 991)
+        sequential = sjpc.update(cfg, params,
+                                 sjpc.update(cfg, params, s0, va, key=ka),
+                                 vb, key=kb)
+        merged = sjpc.merge(sjpc.update(cfg, params, s0, va, key=ka),
+                            sjpc.update(cfg, params, sjpc.init(cfg)[1], vb,
+                                        key=kb))
+        _eq(sequential, merged)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from([1.0, 0.5, 0.25]),
+           st.integers(min_value=1, max_value=3))
+    def test_update_fused_is_update(self, seed, ratio, depth):
+        """The fused path is the reference update, bit for bit, across
+        drawn ratios and depths (the conformance property)."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=5, s=3, ratio=float(ratio), width=128,
+                         depth=depth, seed=23)
+        params, s0 = sjpc.init(cfg)
+        vals = rng.integers(0, 6, size=(24, cfg.d)).astype(np.uint32)
+        key = jax.random.PRNGKey(seed % 1009)
+        _eq(sjpc.update(cfg, params, s0, vals, key=key),
+            sjpc.update_fused(cfg, params, s0, vals, key=key,
+                              use_pallas=False))
+
+
+class TestWindowAlgebra:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_expiry_is_subtraction_inverse(self, seed):
+        """Ingest epoch A, ingest epoch B, subtract A == ingest only B
+        (counters + n): the window-expiry identity."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=128, depth=2, seed=24)
+        params, s0 = sjpc.init(cfg)
+        va = rng.integers(0, 6, size=(16, cfg.d)).astype(np.uint32)
+        vb = rng.integers(0, 6, size=(16, cfg.d)).astype(np.uint32)
+        ka, kb = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+        ea = sjpc.update(cfg, params, s0, va, key=ka)
+        eab = sjpc.update(cfg, params, ea, vb, key=kb)
+        only_b = sjpc.update(cfg, params, sjpc.init(cfg)[1], vb, key=kb)
+        _eq(sjpc.subtract(eab, ea), only_b, check_step=False)
