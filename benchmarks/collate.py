@@ -135,6 +135,27 @@ def service_table(res):
             f"p50 {float(q.get('poll_p50_ms', 0)):.1f} ms, "
             f"p95 {float(q.get('poll_p95_ms', 0)):.1f} ms "
             f"({float(q.get('per_query_p50_ms', 0)):.2f} ms/query)")
+    snap = sorted(((key, row) for key, row in svc.items()
+                   if key.startswith("snapshot_") and isinstance(row, dict)),
+                  key=lambda kv: (int(kv[1].get("streams", 0)), kv[0]))
+    if snap:
+        out.append("\n| snapshot row (all thresholds) | streams | cells "
+                   "| p50 ms | p95 ms |")
+        out.append("|---|---|---|---|---|")
+        for key, row in snap:
+            out.append(
+                f"| {key} | {row.get('streams', '-')} "
+                f"| {row.get('cells', '-')} "
+                f"| {float(row.get('p50_ms', 0)):.2f} "
+                f"| {float(row.get('p95_ms', 0)):.2f} |")
+    for key, label in (
+            ("speedup_fused_query_16s",
+             "fused batched query (steady state) vs per-stream reference"),
+            ("speedup_fused_query_cold_16s",
+             "fused batched query (cold cache) vs per-stream reference")):
+        sp = svc.get(key)
+        if sp is not None:
+            out.append(f"\n{label} at 16 streams: {float(sp):.1f}x")
     return "\n".join(out)
 
 

@@ -71,6 +71,10 @@ def bench_service():
       executor_{K}sh         core ShardedIngest executor at 1/2/4 shards
                              (shard_map over the device mesh when the host
                              exposes enough devices; deferred merge)
+      snapshot_*_{N}s        query-side rows (see _query_rows): whole-group
+                             snapshot x all thresholds at 1/16/64 streams,
+                             fused batched engine (steady-state and
+                             cold-cache) vs the PR 2 per-stream numpy path
     """
     import jax
     from repro.core import sjpc
@@ -187,6 +191,93 @@ def bench_service():
         if not rows:
             print(f"executor subprocess failed:\n{proc.stderr[-2000:]}")
         out.update(rows)
+
+    out.update(_query_rows())
+    return out
+
+
+def _query_rows():
+    """Snapshot query latency: every stream x every threshold of one hash
+    group, p50/p95 over repeated snapshots, at 1/16/64 streams.
+
+    Three engines answer the identical query set:
+
+      snapshot_fused_{N}s       the service default -- fused batched engine
+                                with the version-keyed cache shared across
+                                snapshots.  Steady-state serving (standing
+                                queries polling between flushes, the
+                                continuous-query regime): repeated snapshots
+                                of an unchanged window are cache lookups.
+      snapshot_fused_cold_{N}s  same engine, cache dropped every iteration:
+                                isolates the one-compiled-call batch compute
+                                (stack + device put + jit'd moments/
+                                inversion + host assembly).
+      snapshot_ref_{N}s         the PR 2 semantics: per-stream int64 numpy
+                                F2 + float64 Python inversion, recomputed
+                                every snapshot (PR 2 memoized per Snapshot
+                                object only, so its steady state IS the
+                                recompute) -- reproduced by a fresh
+                                reference engine per iteration.
+
+    ``speedup_fused_query_16s`` (the acceptance row) is steady-state fused
+    vs the PR 2 path; ``speedup_fused_query_cold_16s`` is the compute-only
+    ratio with no cache amortization.
+    """
+    from repro.core.sjpc import SJPCConfig
+    from repro.service import EstimationService, QueryEngine, ServiceConfig
+
+    cfg = SJPCConfig(d=6, s=4, ratio=0.5, width=2048, depth=3, seed=11)
+    svc = EstimationService(ServiceConfig(batch_rows=512, window_epochs=4))
+    svc.create_group("q", cfg)
+    rng = np.random.default_rng(0)
+    names = [f"q{i}" for i in range(64)]
+    for nm in names:
+        svc.create_stream(nm, "q")
+        svc.ingest(nm, rng.integers(0, 1000, size=(2048, cfg.d),
+                                    dtype=np.uint32))
+    svc.flush()
+
+    def measure(make_snapshot, sub, iters=15):
+        for _ in range(2):                       # compile + warm caches
+            snap = make_snapshot(sub)
+            for nm in sub:
+                snap.all_thresholds(nm)
+        lats = []
+        for _ in range(iters):
+            t0 = time.time()
+            snap = make_snapshot(sub)
+            for nm in sub:
+                snap.all_thresholds(nm)
+            lats.append(time.time() - t0)
+        lats.sort()
+        return 1e3 * lats[len(lats) // 2], 1e3 * lats[int(len(lats) * 0.95)]
+
+    def cold_snapshot(sub):
+        svc.engine._cache.clear()
+        return svc.engine.snapshot(sub)
+
+    out = {}
+    thresholds = cfg.num_levels
+    for n in (1, 16, 64):
+        sub = names[:n]
+        rows = {
+            f"snapshot_fused_{n}s": lambda s: svc.engine.snapshot(s),
+            f"snapshot_fused_cold_{n}s": cold_snapshot,
+            f"snapshot_ref_{n}s": lambda s: QueryEngine(
+                svc.registry, use_fused_query=False).snapshot(s),
+        }
+        for tag, mk in rows.items():
+            p50, p95 = measure(mk, sub)
+            out[tag] = {"streams": n, "thresholds": thresholds,
+                        "cells": n * thresholds, "p50_ms": p50, "p95_ms": p95}
+            print(f"{tag:>24}: p50 {p50:7.2f}ms p95 {p95:7.2f}ms "
+                  f"({n} streams x {thresholds} thresholds)")
+    for kind in ("", "cold_"):
+        sp = (out["snapshot_ref_16s"]["p50_ms"]
+              / out[f"snapshot_fused_{kind}16s"]["p50_ms"])
+        out[f"speedup_fused_query_{kind}16s"] = sp
+        print(f"fused{' (cold)' if kind else ''} vs per-stream reference "
+              f"(16 streams x all thresholds): {sp:.1f}x")
     return out
 
 

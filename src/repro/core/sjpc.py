@@ -466,10 +466,9 @@ def estimate(cfg: SJPCConfig, state: SJPCState, *, clamp: bool = True) -> SJPCEs
 # ---------------------------------------------------------------------------
 
 def join_level_inner(state_a: SJPCState, state_b: SJPCState) -> np.ndarray:
-    ca = np.asarray(jax.device_get(state_a.counters)).astype(np.int64)
-    cb = np.asarray(jax.device_get(state_b.counters)).astype(np.int64)
-    prod = (ca * cb).sum(axis=-1)
-    return np.median(prod, axis=-1).astype(np.float64)
+    ca = np.asarray(jax.device_get(state_a.counters))
+    cb = np.asarray(jax.device_get(state_b.counters))
+    return sk.np_estimate_inner_exact(ca, cb).astype(np.float64)
 
 
 def inner_to_join_count(d: int, s: int, r: float, y: Sequence[float],
@@ -494,6 +493,136 @@ def estimate_join(cfg: SJPCConfig, state_a: SJPCState, state_b: SJPCState,
     pairs = float(x.sum())
     return SJPCEstimate(x=x, pairs=pairs, g_s=pairs, y=y,
                         n=float(jax.device_get(state_a.n)))
+
+
+# ---------------------------------------------------------------------------
+# Batched estimation: every (stream, threshold) cell from ONE compiled call
+# ---------------------------------------------------------------------------
+
+class SJPCBatchEstimate(NamedTuple):
+    """Estimates for N same-config sketches at EVERY threshold k = s..d.
+
+    Column i answers threshold k = s + i; ``g[:, i]`` is the suffix sum
+    ``x[:, i:].sum(axis=1)`` (+ n for self-joins), so one batch holds the
+    full all-thresholds table of every stream.
+    """
+    x: np.ndarray              # (N, L) per-level k-similar pair estimates
+    g: np.ndarray              # (N, L) g_k per threshold (join: join size)
+    y: np.ndarray              # (N, L) raw level F2 / inner estimates
+    n: np.ndarray              # (N,) records; joins: (N, 2) per side
+    stderr: np.ndarray         # (N, L) absolute 1-sigma bound (Theorem 2)
+    stderr_offline: np.ndarray  # (N, L) sampling-only bound (Theorem 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "clamp", "join",
+                                             "use_pallas", "interpret"))
+def _estimate_batch_core(cfg: SJPCConfig, counters_a, counters_b, n, *,
+                         clamp: bool, join: bool, use_pallas, interpret):
+    """The fused query dispatch: stacked (N, L, t, w) counters -> per-stream
+    (y, x, g) arrays, one compiled call.
+
+    The per-level Python loops of the reference path (``level_f2`` +
+    ``f2_to_pair_count`` / ``inner_to_join_count``) become: one fused moment
+    launch over every (stream, level, depth-row), a median over the depth
+    axis, and the Eq. 4 / Eq. 7 recursion unrolled over the L static levels
+    (vectorized over streams).  f32 is exact while intermediates stay
+    exact-integer (< 2^24) -- true for the tested magnitudes; conformance vs
+    the float64 numpy oracle is asserted to 1e-6 beyond that
+    (tests/test_fused_query.py).
+    """
+    from repro.kernels.ops import fused_query
+    d, s, r = cfg.d, cfg.s, cfg.ratio
+    moments = fused_query(counters_a, counters_b, use_pallas=use_pallas,
+                          interpret=interpret)             # (N, L, t)
+    y = jnp.median(moments, axis=-1)                       # (N, L)
+
+    # Eq. 4 (self; r^2-scaled accumulators, one division at the end) or
+    # Eq. 7 (join) -- identical recursion orders to the numpy reference.
+    X: dict[int, jax.Array] = {}
+    for k in range(d, s - 1, -1):
+        if join:
+            acc = y[:, k - s] / jnp.float32(r * r)
+        else:
+            acc = y[:, k - s] - jnp.float32(math.comb(d, k) * r) * n
+        for j in range(k + 1, d + 1):
+            acc = acc - jnp.float32(math.comb(j, k)) * X[j]
+        if clamp:
+            acc = jnp.maximum(acc, 0.0)
+        X[k] = acc
+    x = jnp.stack([X[k] for k in range(s, d + 1)], axis=1)  # (N, L)
+    if not join:
+        x = x / jnp.float32(r * r)
+    g = jnp.cumsum(x[:, ::-1], axis=1)[:, ::-1]             # suffix sums
+    if not join:
+        g = g + n[:, None]
+    return y, x, g
+
+
+def _batch_bounds(cfg: SJPCConfig, n: np.ndarray,
+                  g: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized Theorem 1/2 plug-in bounds, float64, same op order as the
+    scalar ``offline_variance_bound`` / ``online_variance_bound`` so the
+    batched stderr matches the per-stream reference bit for bit.
+    n (N,), g (N, L) -> (online, offline) absolute 1-sigma bounds (N, L)."""
+    d, r, w = cfg.d, cfg.ratio, cfg.width
+    lead = np.array([math.comb(d, k) ** 2 / r * math.comb(2 * (d - k), d - k)
+                     for k in range(cfg.s, d + 1)], dtype=np.float64)
+    g = np.asarray(g, np.float64)
+    n = np.asarray(n, np.float64).reshape(-1, 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        off = np.sqrt(lead[None, :] / g) * g
+        on = np.sqrt(lead[None, :] * ((1 + 2 / w) / g
+                                      + (2 / w) * (1 + n / (r * g)) ** 2)) * g
+    pos = g > 0
+    return np.where(pos, on, 0.0), np.where(pos, off, 0.0)
+
+
+def _stack_counters(counters) -> jax.Array:
+    counters = jnp.asarray(counters)
+    assert counters.ndim == 4, \
+        f"expected stacked (N, levels, t, w) counters; got {counters.shape}"
+    return counters
+
+
+def estimate_batch(cfg: SJPCConfig, counters, n, *, clamp: bool = True,
+                   use_pallas: bool | None = None,
+                   interpret: bool | None = None) -> SJPCBatchEstimate:
+    """Self-join estimates for N stacked sketches, all thresholds at once.
+
+    counters: (N, levels, t, w) int32 (stacked ``SJPCState.counters`` of
+    streams sharing one config/params draw); n: (N,) records per stream.
+    """
+    counters = _stack_counters(counters)
+    n = jnp.asarray(n, jnp.float32).reshape(counters.shape[0])
+    y, x, g = _estimate_batch_core(cfg, counters, counters, n, clamp=clamp,
+                                   join=False, use_pallas=use_pallas,
+                                   interpret=interpret)
+    y, x, g, n = (np.asarray(jax.device_get(a), np.float64)
+                  for a in (y, x, g, n))
+    on, off = _batch_bounds(cfg, n, g)
+    return SJPCBatchEstimate(x=x, g=g, y=y, n=n, stderr=on, stderr_offline=off)
+
+
+def estimate_join_batch(cfg: SJPCConfig, counters_a, counters_b, n_a, n_b, *,
+                        clamp: bool = True, use_pallas: bool | None = None,
+                        interpret: bool | None = None) -> SJPCBatchEstimate:
+    """Join sizes for N stacked sketch PAIRS (identical hash params per
+    pair), all thresholds at once.  Error bars follow the reference proxy
+    (DESIGN.md §10.4): the self-join bound at n = max(n_a, n_b) with
+    max(estimate, 1) plugged in."""
+    counters_a = _stack_counters(counters_a)
+    counters_b = _stack_counters(counters_b)
+    N = counters_a.shape[0]
+    n_a = jnp.asarray(n_a, jnp.float32).reshape(N)
+    n_b = jnp.asarray(n_b, jnp.float32).reshape(N)
+    y, x, g = _estimate_batch_core(cfg, counters_a, counters_b, n_a,
+                                   clamp=clamp, join=True,
+                                   use_pallas=use_pallas, interpret=interpret)
+    y, x, g, n_a, n_b = (np.asarray(jax.device_get(a), np.float64)
+                         for a in (y, x, g, n_a, n_b))
+    on, off = _batch_bounds(cfg, np.maximum(n_a, n_b), np.maximum(g, 1.0))
+    return SJPCBatchEstimate(x=x, g=g, y=y, n=np.stack([n_a, n_b], axis=1),
+                             stderr=on, stderr_offline=off)
 
 
 # ---------------------------------------------------------------------------

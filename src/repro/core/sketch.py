@@ -98,6 +98,14 @@ def np_estimate_f2_exact(counters: np.ndarray) -> np.ndarray:
     return np.median(sq, axis=-1)
 
 
+def np_estimate_inner_exact(counters_a: np.ndarray,
+                            counters_b: np.ndarray) -> np.ndarray:
+    """int64-exact inner-product (join size) estimate, the oracle the fused
+    query kernel is tested against.  counters: (..., t, w)."""
+    prod = (counters_a.astype(np.int64) * counters_b.astype(np.int64)).sum(axis=-1)
+    return np.median(prod, axis=-1)
+
+
 def merge(counters_a, counters_b):
     """Sketch linearity: union of sub-streams = counter addition."""
     return counters_a + counters_b

@@ -1,3 +1,4 @@
 """Pallas TPU kernels for the SJPC hot path (validated in interpret mode on
 CPU against the pure-jnp oracles in ref.py)."""
-from .ops import fingerprint, sketch_update, sketch_moments, make_sjpc_update_fn  # noqa: F401
+from .ops import (fingerprint, fused_query, sketch_update,  # noqa: F401
+                  sketch_moments, make_sjpc_update_fn)

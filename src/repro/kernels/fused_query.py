@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused batched query moments for stacked sketches.
+
+Step 2 of Algorithm 1 (and its §6 join analogue) for MANY sketches at once:
+given counter stacks of shape (N, L, t, w) -- N streams, L lattice levels,
+depth t, width w -- compute every (stream, level, depth-row) moment
+
+  out[i, l, k] = sum_j A[i, l, k, j] * B[i, l, k, j]
+
+in ONE launch.  F2 (self-join) is the A = B case; the similarity-join
+estimator uses two different stacks sketched with identical hash params.
+The median over the depth axis and the lattice inversion are O(N*L*t)
+scalars and stay in the surrounding jit (`sjpc._estimate_batch_core`).
+
+  grid (N, L, w_tiles):
+    stream axis     -- parallel; each stream owns an (L, t, w) counter block
+    level axis      -- parallel; each level owns a (t, w) counter plane
+    width axis      -- innermost + sequential: the (t,) accumulator stays
+                      resident in VMEM while every (t, block_w) counter tile
+                      of the plane reduces into it (counters-squared
+                      reduction never leaves the chip)
+
+f32 products/sums are exact while every partial sum stays below 2^24 --
+the paper's O(log n)-bit counter analysis puts SJPC magnitudes well inside
+that for the widths used here; the int64-exact numpy oracle
+(`core.sketch.np_estimate_f2_exact` / `np_estimate_inner_exact`) remains
+the reference for anything larger.  The pure-jnp fallback
+(`kernels.ref.fused_query_ref`) is bit-identical on such exact-integer
+inputs (asserted in tests/test_fused_query.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 2048
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    gw = pl.program_id(2)
+
+    @pl.when(gw == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[0, 0].astype(jnp.float32)          # (t, block_w)
+    b = b_ref[0, 0].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(a * b, axis=-1)     # (t,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def fused_query_pallas(counters_a, counters_b, *,
+                       block_w: int = DEFAULT_BLOCK_W,
+                       interpret: bool = True):
+    """(N, L, t, w) x (N, L, t, w) -> (N, L, t) float32 row moments.
+
+    ``interpret=True`` is the CPU-correctness mode (this container); on real
+    TPU pass interpret=False.
+    """
+    assert counters_a.shape == counters_b.shape, \
+        (counters_a.shape, counters_b.shape)
+    N, L, t, w = counters_a.shape
+    bw = min(block_w, w)
+    # widths are powers of two (sketch invariant), so any pow2 tile divides
+    assert w % bw == 0, f"block_w={bw} must divide width w={w}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(N, L, w // bw),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, bw), lambda i, l, gw: (i, l, 0, gw)),
+            pl.BlockSpec((1, 1, t, bw), lambda i, l, gw: (i, l, 0, gw)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t), lambda i, l, gw: (i, l, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, L, t), jnp.float32),
+        interpret=interpret,
+    )(counters_a, counters_b)

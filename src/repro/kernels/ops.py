@@ -16,6 +16,7 @@ from repro.core.sketch import SketchParams
 from . import ref
 from .fingerprint import fingerprint_pallas
 from .fused_ingest import fused_ingest_pallas
+from .fused_query import fused_query_pallas
 from .sketch_update import sketch_update_pallas
 from .sketch_moments import sketch_moments_pallas
 from .flash_attention import flash_attention as flash_attention_kernel
@@ -92,6 +93,28 @@ def fused_ingest(counters, values, masks, ids, bases, bucket_coeffs,
     return fused_ingest_pallas(counters, values, masks, ids, bases,
                                bucket_coeffs, sign_coeffs, weights,
                                interpret=interpret, **kwargs)
+
+
+def fused_query(counters_a, counters_b=None, *, use_pallas=None,
+                interpret=None, block_w=None):
+    """Batched multi-level row moments for the fused query engine.
+
+    counters (N, L, t, w) stacks -> (N, L, t) float32: every (stream, level,
+    depth-row) F2 (``counters_b is None``) or cross-sketch inner product in
+    one launch.  The Pallas path keeps the per-row accumulator VMEM-resident
+    across width tiles; the fallback is the one-line jnp reduction
+    (bit-identical on exact-integer inputs).
+    """
+    if counters_b is None:
+        counters_b = counters_a
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.fused_query_ref(counters_a, counters_b)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    kwargs = {} if block_w is None else {"block_w": block_w}
+    return fused_query_pallas(counters_a, counters_b, interpret=interpret,
+                              **kwargs)
 
 
 def make_sjpc_update_fn(*, use_pallas=None, interpret=None):

@@ -61,3 +61,13 @@ def sketch_moments_ref(counters_a, counters_b):
     """
     return jnp.sum(counters_a.astype(jnp.float32) * counters_b.astype(jnp.float32),
                    axis=-1)
+
+
+def fused_query_ref(counters_a, counters_b):
+    """Batched multi-level row moments: (N, L, t, w) x (N, L, t, w) ->
+    (N, L, t) float32.  Oracle for the fused query kernel; bit-identical to
+    it whenever all partial sums are exact-integer f32 (< 2^24), which the
+    SJPC counter magnitudes guarantee for the widths in use.  The reduction
+    is exactly :func:`sketch_moments_ref` broadcast over the (N, L) leading
+    dims -- one implementation, one exactness contract."""
+    return sketch_moments_ref(counters_a, counters_b)

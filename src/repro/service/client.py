@@ -62,9 +62,14 @@ class MonitorServiceClient:
         (expiry-by-subtraction), so the windowed estimate self-heals."""
         self._last = merge_monitor(monitor_state)
 
-    def query(self) -> dict[int, QueryResult]:
-        """Windowed g_k (+ error bars) for every monitored threshold."""
-        return self.service.snapshot([self.stream]).all_thresholds(self.stream)
+    def query(self, *, clamp: bool = True) -> dict[int, QueryResult]:
+        """Windowed g_k (+ error bars) for every monitored threshold.
+
+        Served by the fused batched query engine (DESIGN.md §12): the whole
+        all-thresholds table comes out of one compiled call, cached by
+        window version until the next publish changes the window."""
+        return self.service.snapshot([self.stream]).all_thresholds(
+            self.stream, clamp=clamp)
 
     def log_entry(self, step: int) -> dict:
         """A flat dict for the driver's sketch log: g_k +/- stderr per k."""

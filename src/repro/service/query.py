@@ -2,11 +2,26 @@
 
 Queries never touch live ingest state: the engine materializes a
 :class:`Snapshot` -- each stream's windowed ``SJPCState`` pulled at one
-instant -- and answers any number of queries from it.  That is what makes
-*batched continuous queries* cheap: the expensive parts (device->host
-counter pull, the int64-exact level F2 pass) are computed once per stream
-per snapshot and memoized; every additional query against the same snapshot
-is a lattice inversion over d-s+1 numbers.
+instant -- and answers any number of queries from it.
+
+The default query path is the **fused batched engine** (DESIGN.md §12):
+all streams of a hash group are stacked into one (N, levels, t, w) counter
+tensor and ``sjpc.estimate_batch`` answers every (stream, threshold) cell
+-- level moments, depth medians, the Eq. 4 inversion, and the suffix-sum
+g_k table -- from ONE compiled call (a Pallas launch on TPU, the fused jnp
+reduction elsewhere).  Join queries batch the same way through
+``sjpc.estimate_join_batch``; ``Snapshot.prefetch`` lets ``service.poll``
+answer every registered join pair of a group in one additional call.  The
+PR 1 per-stream numpy path (int64-exact F2 + float64 inversion per stream)
+is kept verbatim behind ``use_fused_query=False`` as the conformance
+oracle; tests/test_fused_query.py holds the two within 1e-6.
+
+Results are memoized in a cache shared across snapshots of one
+:class:`QueryEngine`, keyed by each stream's **window version** (bumped by
+`WindowedSketch` on every ingest commit and epoch rotation) -- so standing
+queries over an unchanged window are pure lookups, and a snapshot taken
+across an expiry boundary can never be served a stale entry (the cache-key
+regression test in tests/test_service.py pins this).
 
 Error bars come from the paper's analytical bounds: Theorem 1 (projection
 sampling alone) and Theorem 2 (sampling + sketching, width w) bound
@@ -24,11 +39,28 @@ import math
 from typing import NamedTuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCState
 
 from .registry import StreamRegistry
+
+_CACHE_MAX_ENTRIES = 4096      # shared-cache bound; cleared wholesale beyond
+
+
+def _stack_states(counters_list):
+    """Stack per-stream counter arrays into the (N, L, t, w) batch tensor.
+
+    On CPU backends a host-side ``np.stack`` of the (zero-copy) array views
+    is ~5x cheaper than dispatching N expand+concat XLA ops; on TPU the
+    counters live in device memory, so ``jnp.stack`` avoids a host round
+    trip and the batch is formed on-device.
+    """
+    if jax.default_backend() == "tpu":
+        return jnp.stack(counters_list)
+    return np.stack([np.asarray(c) for c in counters_list])
 
 
 class QueryResult(NamedTuple):
@@ -61,26 +93,108 @@ class _StreamView:
     n: float
     live_epochs: int
     window_epochs: int | None
+    group_id: str
+    version: int               # window version at snapshot time (cache key)
 
 
 class Snapshot:
-    """Immutable view of every stream's window at one instant."""
+    """Immutable view of every stream's window at one instant.
+
+    ``cache`` is shared across the owning engine's snapshots; every entry's
+    key embeds the (name, version) pairs it was computed from, so entries
+    survive exactly as long as the underlying windows are unchanged.
+    """
 
     def __init__(self, views: dict[str, _StreamView],
-                 registry: StreamRegistry):
+                 registry: StreamRegistry, *,
+                 use_fused_query: bool = True,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None,
+                 cache: dict | None = None):
         self._views = views
         self._registry = registry
-        self._f2_cache: dict[str, np.ndarray] = {}
+        self._use_fused = use_fused_query
+        self._use_pallas = use_pallas
+        self._interpret = interpret
+        self._cache = {} if cache is None else cache
+        self._local: dict = {}     # per-snapshot memo of shared-cache hits
 
     def _view(self, name: str) -> _StreamView:
         if name not in self._views:
             raise KeyError(f"stream {name!r} not in snapshot")
         return self._views[name]
 
+    # -- fused batched path --------------------------------------------
+    def _group_views(self, group_id: str) -> list[_StreamView]:
+        return [v for v in self._views.values() if v.group_id == group_id]
+
+    def _self_batch(self, group_id: str, clamp: bool):
+        """The one compiled call answering every (stream, threshold) cell of
+        a hash group; memoized by the member windows' versions (shared
+        engine cache) and per-snapshot (versions are fixed within one
+        snapshot, so repeated queries skip rebuilding the version key)."""
+        local_key = (group_id, clamp)
+        if local_key in self._local:
+            return self._local[local_key]
+        views = self._group_views(group_id)
+        key = ("self", group_id, clamp,
+               tuple((v.name, v.version) for v in views))
+        if key not in self._cache:
+            est = sjpc.estimate_batch(
+                views[0].cfg,
+                _stack_states([v.state.counters for v in views]),
+                np.array([v.n for v in views], np.float32),
+                clamp=clamp, use_pallas=self._use_pallas,
+                interpret=self._interpret)
+            self._cache[key] = ({v.name: i for i, v in enumerate(views)}, est)
+        self._local[local_key] = self._cache[key]
+        return self._local[local_key]
+
+    def _join_batch(self, pairs: list[tuple[str, str]], clamp: bool) -> None:
+        """Answer many join pairs of one group in a single compiled call,
+        filling the per-pair cache entries ``prefetch``/``join`` read."""
+        views_a = [self._view(a) for a, _ in pairs]
+        views_b = [self._view(b) for _, b in pairs]
+        est = sjpc.estimate_join_batch(
+            views_a[0].cfg,
+            _stack_states([v.state.counters for v in views_a]),
+            _stack_states([v.state.counters for v in views_b]),
+            np.array([v.n for v in views_a], np.float32),
+            np.array([v.n for v in views_b], np.float32),
+            clamp=clamp, use_pallas=self._use_pallas,
+            interpret=self._interpret)
+        for i, (va, vb) in enumerate(zip(views_a, views_b)):
+            k = ("join", va.name, va.version, vb.name, vb.version, clamp)
+            self._cache[k] = sjpc.SJPCBatchEstimate(
+                *(a[i:i + 1] for a in est))
+
+    def prefetch(self, queries, *, clamp: bool = True) -> None:
+        """Warm the cache for a batch of :class:`ContinuousQuery` -- one
+        ``estimate_batch`` per touched group plus one ``estimate_join_batch``
+        per group with join pairs (instead of one call per query)."""
+        if not self._use_fused:
+            return
+        join_pairs: dict[str, list[tuple[str, str]]] = {}
+        for q in queries:
+            if q.kind == "join":
+                a, b = q.streams
+                self._registry.require_joinable(a, b)
+                va, vb = self._view(a), self._view(b)
+                k = ("join", a, va.version, b, vb.version, clamp)
+                if k not in self._cache:
+                    join_pairs.setdefault(va.group_id, []).append((a, b))
+            else:
+                self._self_batch(self._view(q.streams[0]).group_id, clamp)
+        for pairs in join_pairs.values():
+            self._join_batch(sorted(set(pairs)), clamp)
+
+    # -- per-stream reference oracle -----------------------------------
     def _level_f2(self, name: str) -> np.ndarray:
-        if name not in self._f2_cache:
-            self._f2_cache[name] = sjpc.level_f2(self._view(name).state)
-        return self._f2_cache[name]
+        v = self._view(name)
+        key = ("f2", name, v.version)
+        if key not in self._cache:
+            self._cache[key] = sjpc.level_f2(v.state)
+        return self._cache[key]
 
     # ------------------------------------------------------------------
     def self_join(self, name: str, s: int | None = None, *,
@@ -91,12 +205,20 @@ class Snapshot:
         if not v.cfg.s <= s <= v.cfg.d:
             raise ValueError(f"s={s} outside sketched range "
                              f"[{v.cfg.s}, {v.cfg.d}] of {name!r}")
-        y = self._level_f2(name)
-        x = sjpc.f2_to_pair_count(v.cfg.d, v.cfg.s, v.n, v.cfg.ratio, y,
-                                  clamp=clamp)
-        xs = x[s - v.cfg.s:]
-        g = float(xs.sum()) + v.n
-        on, off = _stderr(v.cfg, s, v.n, g)
+        li = s - v.cfg.s
+        if self._use_fused:
+            index, est = self._self_batch(v.group_id, clamp)
+            i = index[name]
+            g = float(est.g[i, li])
+            on, off = float(est.stderr[i, li]), float(est.stderr_offline[i, li])
+            xs = est.x[i, li:]
+        else:
+            y = self._level_f2(name)
+            x = sjpc.f2_to_pair_count(v.cfg.d, v.cfg.s, v.n, v.cfg.ratio, y,
+                                      clamp=clamp)
+            xs = x[li:]
+            g = float(xs.sum()) + v.n
+            on, off = _stderr(v.cfg, s, v.n, g)
         return QueryResult("self_join", (name,), s, g, on, off, xs,
                            (v.n,), (v.live_epochs,))
 
@@ -109,16 +231,27 @@ class Snapshot:
         s = cfg.s if s is None else s
         if not cfg.s <= s <= cfg.d:
             raise ValueError(f"s={s} outside sketched range [{cfg.s}, {cfg.d}]")
-        y = sjpc.join_level_inner(va.state, vb.state)
-        x = sjpc.inner_to_join_count(cfg.d, cfg.s, cfg.ratio, y, clamp=clamp)
-        xs = x[s - cfg.s:]
-        j = float(xs.sum())
-        on, off = _stderr(cfg, s, max(va.n, vb.n), max(j, 1.0))
+        li = s - cfg.s
+        if self._use_fused:
+            k = ("join", a, va.version, b, vb.version, clamp)
+            if k not in self._cache:
+                self._join_batch([(a, b)], clamp)
+            est = self._cache[k]
+            j = float(est.g[0, li])
+            on, off = float(est.stderr[0, li]), float(est.stderr_offline[0, li])
+            xs = est.x[0, li:]
+        else:
+            y = sjpc.join_level_inner(va.state, vb.state)
+            x = sjpc.inner_to_join_count(cfg.d, cfg.s, cfg.ratio, y,
+                                         clamp=clamp)
+            xs = x[li:]
+            j = float(xs.sum())
+            on, off = _stderr(cfg, s, max(va.n, vb.n), max(j, 1.0))
         return QueryResult("join", (a, b), s, j, on, off, xs,
                            (va.n, vb.n), (va.live_epochs, vb.live_epochs))
 
     def all_thresholds(self, name: str, *, clamp: bool = True) -> dict[int, QueryResult]:
-        """g_k for every k in [cfg.s, d] -- one inversion, d-s+1 results."""
+        """g_k for every k in [cfg.s, d] -- one batch lookup, d-s+1 results."""
         v = self._view(name)
         return {k: self.self_join(name, k, clamp=clamp)
                 for k in range(v.cfg.s, v.cfg.d + 1)}
@@ -146,18 +279,31 @@ class ContinuousQuery:
 
 
 class QueryEngine:
-    def __init__(self, registry: StreamRegistry):
+    def __init__(self, registry: StreamRegistry, *,
+                 use_fused_query: bool = True,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None):
         self._registry = registry
+        self.use_fused_query = use_fused_query
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self._cache: dict = {}
 
     def snapshot(self, names: list[str] | None = None) -> Snapshot:
         entries = (self._registry.streams() if names is None
                    else [self._registry.stream(n) for n in names])
+        if len(self._cache) > _CACHE_MAX_ENTRIES:
+            self._cache.clear()
         views = {}
         for e in entries:
             st = e.window.window_state()
             views[e.name] = _StreamView(
                 name=e.name, cfg=self._registry.group(e.group_id).cfg,
-                state=st, n=float(np.asarray(st.n)),
+                state=st, n=e.window.n_live(),
                 live_epochs=e.window.live_epochs,
-                window_epochs=e.window.window_epochs)
-        return Snapshot(views, self._registry)
+                window_epochs=e.window.window_epochs,
+                group_id=e.group_id, version=e.window.version)
+        return Snapshot(views, self._registry,
+                        use_fused_query=self.use_fused_query,
+                        use_pallas=self.use_pallas, interpret=self.interpret,
+                        cache=self._cache)

@@ -47,13 +47,18 @@ class ServiceConfig:
     interpret: bool | None = None    # forwarded to the Pallas path
     use_fused: bool = True           # fused ingest path; False = reference oracle
     shards: int = 1                  # data-parallel ingest shards per round
+    use_fused_query: bool = True     # batched query engine; False = per-stream
+                                     # numpy oracle (DESIGN.md §12)
 
 
 class EstimationService:
     def __init__(self, cfg: ServiceConfig = ServiceConfig()):
         self.cfg = cfg
         self.registry = StreamRegistry()
-        self.engine = QueryEngine(self.registry)
+        self.engine = QueryEngine(self.registry,
+                                  use_fused_query=cfg.use_fused_query,
+                                  use_pallas=cfg.use_pallas,
+                                  interpret=cfg.interpret)
         self._pipelines: dict[str, IngestPipeline] = {}
         self._continuous: dict[str, ContinuousQuery] = {}
         self.stats = {"ingested_records": 0, "flush_s": 0.0, "epochs": 0,
@@ -136,8 +141,16 @@ class EstimationService:
         self._continuous[query.name] = query
 
     def poll(self) -> dict[str, QueryResult | dict[int, QueryResult]]:
-        """Evaluate every continuous query against ONE shared snapshot."""
+        """Evaluate every continuous query against ONE shared snapshot.
+
+        ``prefetch`` first batches the device work: one ``estimate_batch``
+        per touched hash group answers every self-join/all-thresholds cell,
+        and all registered join pairs of a group share one
+        ``estimate_join_batch`` -- the individual ``evaluate`` calls below
+        are then pure cache lookups.
+        """
         snap = self.snapshot()
+        snap.prefetch(self._continuous.values())
         self.stats["polls"] += 1
         return {name: q.evaluate(snap) for name, q in self._continuous.items()}
 

@@ -22,6 +22,7 @@ original whole-stream monitor semantics.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core import sjpc
@@ -43,6 +44,7 @@ class WindowedSketch:
         self.window_epochs = window_epochs
         self.total = init_state
         self.epoch = 0                      # index of the open epoch
+        self.version = 0                    # bumped whenever ``total`` changes
         if window_epochs is not None:
             shape = (window_epochs,) + tuple(init_state.counters.shape)
             self._ring_counters = jnp.zeros(shape, jnp.int32)
@@ -54,6 +56,9 @@ class WindowedSketch:
     def absorb_delta(self, new_state: SJPCState) -> None:
         """Commit the post-ingest cumulative state; the delta vs the previous
         total is credited to the open epoch's ring slot."""
+        if new_state is self.total:
+            return          # no-op flush: nothing changed, keep the version
+        self.version += 1
         if self.window_epochs is not None:
             d_counters = new_state.counters - self.total.counters
             d_n = new_state.n - self.total.n
@@ -71,11 +76,14 @@ class WindowedSketch:
         if self._live < self.window_epochs:
             self._live += 1
         else:
-            # the slot we are about to reuse holds the expiring epoch
+            # the slot we are about to reuse holds the expiring epoch;
+            # version bumps only here -- a rotation that leaves ``total``
+            # untouched must not invalidate version-keyed query caches
             expired = SJPCState(counters=self._ring_counters[self._pos],
                                 n=self._ring_n[self._pos],
                                 step=self.total.step)
             self.total = sjpc.subtract(self.total, expired)
+            self.version += 1
         self._ring_counters = self._ring_counters.at[self._pos].set(0)
         self._ring_n = self._ring_n.at[self._pos].set(0.0)
 
@@ -83,6 +91,14 @@ class WindowedSketch:
     def window_state(self) -> SJPCState:
         """The SJPC state of exactly the live window (W1: == ring sum)."""
         return self.total
+
+    def n_live(self) -> float:
+        """Host-side record count of the live window, cached per version so
+        snapshot construction does not pay one device_get per stream."""
+        if getattr(self, "_n_cache_version", None) != self.version:
+            self._n_cache = float(np.asarray(self.total.n))
+            self._n_cache_version = self.version
+        return self._n_cache
 
     @property
     def live_epochs(self) -> int:

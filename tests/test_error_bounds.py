@@ -53,6 +53,7 @@ def _trial_estimates(cfg: SJPCConfig, values: np.ndarray) -> list[float]:
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("d,s,ratio,width,depth", POINTS)
 def test_theorem2_bound_holds_at_stated_confidence(d, s, ratio, width, depth):
     cfg = SJPCConfig(d=d, s=s, ratio=ratio, width=width, depth=depth, seed=100)
@@ -89,6 +90,7 @@ def test_offline_bound_dominated_by_online(d, s, ratio):
     assert bounds[0] > bounds[1] > bounds[2]
 
 
+@pytest.mark.slow
 def test_estimator_concentrates_with_width():
     """Sanity companion to the bound: empirical spread shrinks as the
     sketch widens (holding data + trials fixed)."""

@@ -152,6 +152,85 @@ class TestUpdateInvariance:
                               use_pallas=False))
 
 
+class TestQueryPathProperties:
+    """Properties of the estimation (query) side: threshold monotonicity,
+    clamp non-negativity, and merge/estimate consistency -- on both the
+    per-stream reference path and the batched fused path."""
+
+    def _sketch(self, rng, cfg, batches, seed0=0):
+        params, st = sjpc.init(cfg)
+        for b in range(batches):
+            vals = rng.integers(0, 5, size=(20, cfg.d)).astype(np.uint32)
+            st = sjpc.update(cfg, params, st, vals,
+                             key=jax.random.PRNGKey(seed0 + b))
+        return params, st
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from([1, 3]))
+    def test_g_non_increasing_in_s(self, seed, depth):
+        """g(s) counts pairs >= s-similar, so (with clamped X >= 0) it must
+        be non-increasing in s -- on the batched path's whole g table."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=5, s=2, ratio=0.5, width=128, depth=depth, seed=61)
+        _, state = self._sketch(rng, cfg, 3, seed0=seed % 1013)
+        be = sjpc.estimate_batch(cfg, state.counters[None],
+                                 np.array([float(state.n)], np.float32))
+        g = be.g[0]
+        assert np.all(g[:-1] >= g[1:]), g
+        # and the reference per-threshold suffix sums agree with monotonicity
+        ref = sjpc.estimate(cfg, state)
+        ref_g = np.array([float(ref.x[i:].sum()) + ref.n
+                          for i in range(cfg.num_levels)])
+        assert np.all(ref_g[:-1] >= ref_g[1:])
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_clamp_never_negative(self, seed):
+        """Clamped inversion output is non-negative for ARBITRARY (even
+        adversarially negative) level F2 inputs, on both inversions and on
+        the batched path fed random counter states."""
+        rng = np.random.default_rng(seed)
+        d, s = 5, 2
+        y = rng.uniform(-1e6, 1e6, size=d - s + 1)
+        assert (sjpc.f2_to_pair_count(d, s, n=rng.uniform(0, 1e3), r=0.5,
+                                      y=y, clamp=True) >= 0).all()
+        assert (sjpc.inner_to_join_count(d, s, 0.5, y, clamp=True) >= 0).all()
+        counters = rng.integers(-30, 30, size=(2, d - s + 1, 2, 64)) \
+            .astype(np.int32)
+        cfg = SJPCConfig(d=d, s=s, ratio=0.5, width=64, depth=2, seed=62)
+        be = sjpc.estimate_batch(cfg, jnp.asarray(counters),
+                                 np.array([7.0, 0.0], np.float32))
+        assert (be.x >= 0).all() and (be.stderr >= 0).all()
+        assert (be.g >= 0).all()
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_estimate_of_merge_is_estimate_of_union(self, seed):
+        """estimate(merge(a, b)) == estimate of the sequentially-updated
+        union stream (same per-batch keys) -- sketch linearity carried all
+        the way through the estimator, reference AND batched paths."""
+        rng = np.random.default_rng(seed)
+        cfg = SJPCConfig(d=4, s=2, ratio=0.5, width=128, depth=3, seed=63)
+        params, s0 = sjpc.init(cfg)
+        va = rng.integers(0, 5, size=(18, cfg.d)).astype(np.uint32)
+        vb = rng.integers(0, 5, size=(12, cfg.d)).astype(np.uint32)
+        ka, kb = jax.random.PRNGKey(seed % 887), jax.random.PRNGKey(seed % 883)
+        a = sjpc.update(cfg, params, s0, va, key=ka)
+        b = sjpc.update(cfg, params, s0, vb, key=kb)
+        union = sjpc.update(cfg, params, a, vb, key=kb)
+        em = sjpc.estimate(cfg, sjpc.merge(a, b))
+        eu = sjpc.estimate(cfg, union)
+        np.testing.assert_array_equal(em.y, eu.y)
+        np.testing.assert_array_equal(em.x, eu.x)
+        assert em.g_s == eu.g_s and em.n == eu.n
+        bm = sjpc.estimate_batch(cfg, sjpc.merge(a, b).counters[None],
+                                 np.array([float(em.n)], np.float32))
+        bu = sjpc.estimate_batch(cfg, union.counters[None],
+                                 np.array([float(eu.n)], np.float32))
+        np.testing.assert_array_equal(bm.g, bu.g)
+
+
 class TestWindowAlgebra:
     @settings(max_examples=6, deadline=None)
     @given(st.integers(min_value=0, max_value=2**31 - 1))
