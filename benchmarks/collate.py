@@ -159,6 +159,45 @@ def service_table(res):
     return "\n".join(out)
 
 
+def equal_space_table(res):
+    """The `equal_space` suite: every served estimator kind at derived
+    (equal-space) budgets on the seeded planted-cluster stream -- the
+    paper's Fig. 8 as a living benchmark.  Tolerant of missing rows and
+    rendered in sorted kind order so reruns diff cleanly."""
+    eq = res.get("equal_space")
+    if not isinstance(eq, dict) or not eq:
+        return ""
+    wl = eq.get("workload", {}) if isinstance(eq.get("workload"), dict) else {}
+    thresholds = sorted(int(s) for s in wl.get("g_true", {}))
+    out = ["#### Equal-space accuracy — served estimators, one hash group\n"]
+    if wl:
+        out.append(f"workload: {wl.get('records', '?')} records, "
+                   f"d={wl.get('d', '?')}, SJPC budget "
+                   f"{wl.get('sjpc_bytes', '?')} bytes\n")
+    hdr = "| estimator | memory B | ingest rec/s | query p50 ms |"
+    sep = "|---|---|---|---|"
+    for s in thresholds:
+        hdr += f" rel err s={s} |"
+        sep += "---|"
+    out += [hdr, sep]
+    for kind in sorted(k for k in eq if k != "workload"):
+        row = eq[kind]
+        if not isinstance(row, dict):
+            continue
+        rps = row.get("ingest_records_per_sec")
+        q50 = row.get("query_p50_ms")
+        line = (f"| {kind} | {row.get('memory_bytes', '-')} "
+                f"| {float(rps):.0f} |" if rps is not None
+                else f"| {kind} | {row.get('memory_bytes', '-')} | - |")
+        line += f" {float(q50):.1f} |" if q50 is not None else " - |"
+        errs = row.get("rel_err", {})
+        for s in thresholds:
+            e = errs.get(str(s))
+            line += f" {float(e):.3f} |" if e is not None else " - |"
+        out.append(line)
+    return "\n".join(out)
+
+
 def paper_tables(results_path):
     """Markdown for whatever suites are present in results.json.
 
@@ -196,6 +235,9 @@ def paper_tables(results_path):
     svc = service_table(res)
     if svc:
         out.append("\n" + svc)
+    eq = equal_space_table(res)
+    if eq:
+        out.append("\n" + eq)
     return "\n".join(out)
 
 

@@ -3,7 +3,7 @@
 Default (no args) runs the paper benchmarks + the kernel micro-bench and
 collates any dry-run roofline JSONs under benchmarks/out/dryrun into the
 roofline summary table.  Individual benchmarks: table3 fig4_6 fig8 fig9a
-fig9b fig9c fig10 kernels service roofline.
+fig9b fig9c fig10 kernels service equal_space roofline.
 """
 from __future__ import annotations
 
@@ -320,6 +320,97 @@ def _executor_rows():
     return out
 
 
+def bench_equal_space():
+    """The paper's Fig. 8 as a living benchmark (DESIGN.md §13.5): replay
+    one seeded planted-cluster stream through ALL served estimator kinds
+    at derived (equal-space) budgets, in one hash group, and report
+
+      * per-threshold relative error vs the exact count,
+      * ingest throughput (records/s, per-kind cohort dispatch),
+      * query latency (whole all-thresholds table, p50 over snapshots).
+
+    The accuracy ordering (SJPC < reservoir at the mid band) is the
+    test_paper_accuracy.py service-path contract; this row records the
+    margins and the throughput cost of each estimator."""
+    import jax
+    from repro import estimators as E
+    from repro.core import exact
+    from repro.core.sjpc import SJPCConfig
+    from repro.data.synthetic import planted_cluster_records
+    from repro.service import EstimationService, ServiceConfig
+
+    cfg = SJPCConfig(d=6, s=4, ratio=1.0, width=2048, depth=3, seed=17)
+    n_records = 16384
+    rng = np.random.default_rng(29)
+    vals = planted_cluster_records(n_records, cfg.d, rng,
+                                   [(4, 256, 3), (5, 192, 2), (6, 96, 1)])
+    x_exact = exact.exact_pair_counts(vals)
+    g_true = {s: float(x_exact[s:].sum() + n_records)
+              for s in range(cfg.s, cfg.d + 1)}
+
+    kinds = E.available()
+    out = {"workload": {"records": n_records, "d": cfg.d,
+                        "g_true": {str(s): g for s, g in g_true.items()},
+                        "sjpc_bytes": cfg.counters_bytes}}
+
+    # side-by-side accuracy: one service, every kind in one hash group
+    svc = EstimationService(ServiceConfig(batch_rows=2048,
+                                          window_epochs=None))
+    svc.create_group("g", cfg)
+    for kind in kinds:
+        svc.create_stream(kind, "g", estimator=kind)
+        svc.ingest(kind, vals)
+    snap = svc.snapshot()
+    for kind in kinds:
+        row = snap.all_thresholds(kind)
+        out[kind] = {
+            "memory_bytes": svc.registry.stream(kind).estimator.memory_bytes(),
+            "rel_err": {str(s): abs(r.estimate - g_true[s])
+                        / max(g_true[s], 1.0)
+                        for s, r in row.items()},
+        }
+
+    # per-kind ingest throughput (isolated service -> clean cohort timing)
+    for kind in kinds:
+        s1 = EstimationService(ServiceConfig(batch_rows=2048,
+                                             window_epochs=None))
+        s1.create_group("g", cfg)
+        s1.create_stream("t", "g", estimator=kind)
+        s1.ingest("t", vals)
+        s1.flush()                                   # warmup + compile
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(s1.registry.stream("t").window.total))
+        cycles = 2
+        t0 = time.time()
+        for _ in range(cycles):
+            s1.ingest("t", vals)
+            s1.flush()
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(s1.registry.stream("t").window.total))
+        dt = time.time() - t0
+        out[kind]["ingest_records_per_sec"] = n_records * cycles / dt
+
+        # query latency: the full all-thresholds table, p50 over snapshots
+        engine = s1.engine
+        for _ in range(2):
+            engine._cache.clear()
+            engine.snapshot(["t"]).all_thresholds("t")
+        lats = []
+        for _ in range(9):
+            engine._cache.clear()                    # cold: compute, not cache
+            t0 = time.time()
+            engine.snapshot(["t"]).all_thresholds("t")
+            lats.append(time.time() - t0)
+        lats.sort()
+        out[kind]["query_p50_ms"] = 1e3 * lats[len(lats) // 2]
+        print(f"{kind:>10}: mem {out[kind]['memory_bytes']:>7}B  "
+              f"ingest {out[kind]['ingest_records_per_sec']:>9.0f} rec/s  "
+              f"query p50 {out[kind]['query_p50_ms']:6.1f}ms  relerr "
+              + " ".join(f"s={s}:{out[kind]['rel_err'][str(s)]:.3f}"
+                         for s in range(cfg.s, cfg.d + 1)))
+    return out
+
+
 def bench_roofline():
     """Collate dry-run JSONs into the roofline summary table."""
     d = os.path.join(OUT_DIR, "dryrun")
@@ -357,7 +448,8 @@ def bench_roofline():
 def main(argv):
     os.makedirs(OUT_DIR, exist_ok=True)
     from benchmarks import paper_benchmarks as PB
-    names = argv or (list(PB.ALL) + ["kernels", "service", "roofline"])
+    names = argv or (list(PB.ALL)
+                     + ["kernels", "service", "equal_space", "roofline"])
     results_path = os.path.join(OUT_DIR, "results.json")
     # merge into prior results so a partial run (e.g. `run service`) never
     # drops the other suites' rows from the collated report
@@ -375,6 +467,8 @@ def main(argv):
             results[name] = bench_kernels()
         elif name == "service":
             results[name] = bench_service()
+        elif name == "equal_space":
+            results[name] = bench_equal_space()
         elif name == "roofline":
             results[name] = bench_roofline()
         else:

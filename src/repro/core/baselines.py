@@ -23,14 +23,18 @@ from .exact import brute_force_pair_counts
 
 def random_sampling_pair_counts(values: np.ndarray, sample_size: int,
                                 rng: np.random.Generator) -> np.ndarray:
-    """x[k] estimates (ordered pairs) from a uniform record sample."""
+    """x[k] estimates (ordered pairs) from a uniform record sample.
+
+    A sample of fewer than two records carries no pair information, so the
+    zero histogram is returned (and g_s degenerates to n) -- in particular
+    for the empty stream, where ``rng.choice(0, ...)`` would raise."""
     values = np.asarray(values)
     n = values.shape[0]
     R = min(sample_size, n)
-    idx = rng.choice(n, size=R, replace=False)
-    x_sample = brute_force_pair_counts(values[idx])
     if R < 2:
         return np.zeros(values.shape[1] + 1)
+    idx = rng.choice(n, size=R, replace=False)
+    x_sample = brute_force_pair_counts(values[idx])
     scale = (n * (n - 1)) / (R * (R - 1))
     return x_sample * scale
 
@@ -42,8 +46,14 @@ def random_sampling_g(values: np.ndarray, s: int, sample_size: int,
 
 
 def sample_size_for_bytes(space_bytes: int, record_bytes: int) -> int:
-    """Records storable in the space budget (the Fig. 8 equal-space rule)."""
-    return max(2, space_bytes // max(record_bytes, 1))
+    """Records storable in the space budget (the Fig. 8 equal-space rule).
+
+    Honest accounting: a budget that holds fewer than two records yields
+    that many (0 or 1) -- no silent floor to 2, which would quietly grant
+    the sampling competitor more space than the sketch it is compared
+    against.  ``random_sampling_pair_counts`` handles R < 2 by returning
+    the zero histogram."""
+    return space_bytes // max(record_bytes, 1)
 
 
 def _bucket_keys(values: np.ndarray, cols: np.ndarray) -> np.ndarray:
@@ -61,13 +71,25 @@ def lsh_ss_g(values: np.ndarray, s: int, rng: np.random.Generator,
 
     m_h / m_l: pair-sample sizes for the same-bucket (high similarity) and
     cross-bucket (low) strata; the authors suggest m_h = m_l = n.
+
+    ``num_hash_cols`` is the size c of the random column subset the LSH
+    buckets hash (the paper's LSH-SS uses a subset, not a single column);
+    validated to 1 <= c <= d.  At c = d buckets are exact records, so the
+    same stratum is exactly the duplicate pairs (regression-pinned in
+    tests/test_baselines.py).
     """
     values = np.asarray(values)
     n, d = values.shape
+    if not 1 <= num_hash_cols <= d:
+        raise ValueError(
+            f"num_hash_cols={num_hash_cols} outside [1, d={d}]"
+            " (the LSH bucket key is a random column subset)")
+    if n < 2:
+        return float(n)                 # no pairs; g_s is the self-pairs
     m_h = n if m_h is None else m_h
     m_l = n if m_l is None else m_l
 
-    cols = rng.choice(d, size=min(num_hash_cols, d), replace=False)
+    cols = rng.choice(d, size=num_hash_cols, replace=False)
     bucket = _bucket_keys(values, cols)
     order = np.argsort(bucket, kind="stable")
     sorted_b = bucket[order]

@@ -22,6 +22,29 @@ def _rng(seed):
     return np.random.default_rng(seed)
 
 
+def planted_cluster_records(n: int, d: int, rng: np.random.Generator,
+                            clusters) -> np.ndarray:
+    """Uniform noise + planted near-duplicate clusters.
+
+    ``clusters`` is a list of (k, size, count): plant ``count`` clusters of
+    ``size`` records agreeing on ``k`` columns -- the quadratic
+    duplicate-group structure of the paper's DBLP data (g_s >> n, the
+    regime where small samples fail; Figs. 4/8).  The one workload
+    generator shared by the paper-accuracy regression suite, the
+    ``equal_space`` benchmark, and examples/equal_space_serving.py.
+    """
+    recs = rng.integers(0, 1 << 30, size=(n, d), dtype=np.uint32)
+    pos = n - 1
+    for k, size, count in clusters:
+        for _ in range(count):
+            src = rng.integers(0, n // 4)
+            cols = rng.choice(d, size=k, replace=False)
+            for _ in range(size - 1):
+                recs[pos, cols] = recs[src, cols]
+                pos -= 1
+    return recs
+
+
 def dblp_like(n: int, *, d: int = 5, seed: int = 0,
               cardinalities=None, dup_fraction: float = 0.1,
               dup_columns: int | None = None):

@@ -1,0 +1,28 @@
+"""repro.estimators -- every similarity-join size estimator behind one
+streaming protocol (DESIGN.md §13).
+
+Importing this package registers the built-in kinds:
+
+  "sjpc"       the paper's sketch estimator (Algorithm 1); linear,
+               joinable, analytical error bounds -- the reference
+               implementation (estimators/sjpc_backend.py)
+  "reservoir"  one-pass uniform record sampling (§2.1 / Fig. 8), queried
+               through the fused all-pairs kernel (estimators/reservoir.py)
+  "lsh_ss"     one-pass stratified LSH sampling (§2.3), bucket-count
+               sketch + online pair reservoirs (estimators/lsh_ss.py)
+
+``make(kind, sjpc_cfg)`` derives each competitor's configuration from the
+group's SJPCConfig, so all kinds are equal-space by construction.
+"""
+from .base import (EstimateTable, Estimator, available, index_state, make,
+                   register, scan_rounds, stack_states, zeros_like_stack)
+from .lsh_ss import LSHSSConfig, LSHSSEstimator, derive_config
+from .reservoir import ReservoirConfig, ReservoirEstimator, capacity_for_bytes
+from .sjpc_backend import SJPCEstimator
+
+__all__ = [
+    "EstimateTable", "Estimator", "LSHSSConfig", "LSHSSEstimator",
+    "ReservoirConfig", "ReservoirEstimator", "SJPCEstimator", "available",
+    "capacity_for_bytes", "derive_config", "index_state", "make", "register",
+    "scan_rounds", "stack_states", "zeros_like_stack",
+]

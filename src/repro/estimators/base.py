@@ -1,0 +1,255 @@
+"""The Estimator protocol: every similarity-join size estimator -- the
+paper's SJPC *and* its competitors -- behind one streaming, service-grade
+interface (DESIGN.md §13).
+
+An :class:`Estimator` instance is the per-hash-group engine for one
+estimator family: it owns the static configuration (dimensionality d,
+sketch threshold s, memory budget, hash/PRNG seeds) and operates on
+immutable per-stream **states** (pytrees of jax arrays, so they stack,
+ship across devices, and ride the service's batched ingest dispatch
+unchanged).  The protocol:
+
+  init(sid)                  fresh per-stream state (sid tags provenance
+                             for estimators whose subtract is tag-based)
+  ingest_rounds(...)         ALL coalesced rounds of a flush for ALL
+                             streams of a cohort in one jit'd dispatch --
+                             states stacked on a leading stream axis,
+                             records (R, S, B, d), masks (R, S, B),
+                             per-(round, stream) PRNG keys (R, S)
+  merge / subtract           the window algebra: merge combines disjoint
+                             sub-streams, subtract removes a previously
+                             merged component (sliding-window expiry).
+                             ``linear=True`` estimators do both exactly by
+                             counter arithmetic; sampling estimators merge
+                             by deterministic weighted union and subtract
+                             by provenance tag (exact for the epoch states
+                             the window hands them).
+  memory_bytes()             the per-stream state footprint -- the paper's
+                             equal-space comparison axis (Fig. 8)
+  estimate_batch(states)     every (stream, threshold) estimate of a
+                             stacked cohort from one dispatch
+  estimate_ref(state)        the per-stream host-numpy oracle the batched
+                             path is held to (<= 1e-6, tests)
+
+The registry maps estimator kind names ("sjpc", "reservoir", "lsh_ss") to
+factories taking the group's ``SJPCConfig`` -- so competitors derive their
+space budget FROM the sketch they are compared against, and an equal-space
+side-by-side deployment is the default, not a benchmark contrivance.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class EstimateTable(NamedTuple):
+    """Estimates for N same-config streams at EVERY threshold k = s..d.
+
+    Shapes mirror :class:`repro.core.sjpc.SJPCBatchEstimate` (column i
+    answers threshold k = s + i); estimators with no analytical error
+    bound report zero stderr columns (documented per estimator).
+    """
+    x: np.ndarray              # (N, L) per-level k-similar pair estimates
+    g: np.ndarray              # (N, L) g_k per threshold
+    y: np.ndarray              # (N, L) raw level diagnostics (estimator-specific)
+    n: np.ndarray              # (N,) records in each stream's window
+    stderr: np.ndarray         # (N, L) absolute 1-sigma bound (0 = unknown)
+    stderr_offline: np.ndarray  # (N, L) sampling-only bound (0 = unknown)
+
+
+class Estimator:
+    """Abstract base; subclasses set ``kind`` and the capability flags."""
+
+    kind: str = "abstract"
+    linear: bool = False       # exact merge/subtract by state arithmetic
+    supports_join: bool = False  # two-stream §6 join estimates
+
+    # subclasses must define: d, s, seed attributes (ints)
+
+    @property
+    def num_levels(self) -> int:
+        return self.d - self.s + 1
+
+    @property
+    def thresholds(self) -> range:
+        return range(self.s, self.d + 1)
+
+    @property
+    def ingest_seed(self) -> int:
+        """Seed of the per-(stream, round) ingest key grid (see
+        service.ingest.ingest_key_grid)."""
+        return self.seed ^ 0x5E41CE
+
+    # -- protocol ------------------------------------------------------
+    def init(self, sid: int = 0):
+        raise NotImplementedError
+
+    def ingest_rounds(self, states, values, row_mask, keys):
+        """states: pytree stacked on a leading S axis; values (R, S, B, d)
+        uint32; row_mask (R, S, B) int32; keys (R, S) PRNG keys.  Returns
+        the updated stacked states.  One jit'd dispatch per call."""
+        raise NotImplementedError
+
+    def merge(self, a, b):
+        raise NotImplementedError
+
+    def subtract(self, a, b):
+        raise NotImplementedError
+
+    def memory_bytes(self) -> int:
+        raise NotImplementedError
+
+    def estimate_batch(self, states, *, clamp: bool = True,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> EstimateTable:
+        """Stacked states (leading N axis) -> the full (N, L) table.
+        ``use_pallas``/``interpret`` are optional dispatch hints for
+        kernel-backed estimators (None = the instance's own default)."""
+        raise NotImplementedError
+
+    def estimate_ref(self, state, *, clamp: bool = True) -> EstimateTable:
+        """Single-state host-numpy reference (N=1 table); the conformance
+        oracle for ``estimate_batch`` and the ``use_fused_query=False``
+        service path.  Default: the batched path on a singleton stack."""
+        return self.estimate_batch(stack_states([state]), clamp=clamp)
+
+    # -- generic helpers ----------------------------------------------
+    def state_n(self, state) -> float:
+        return float(np.asarray(jax.device_get(state.n)))
+
+
+# ---------------------------------------------------------------------------
+# State stacking: pytree states <-> batched (leading-axis) cohorts
+# ---------------------------------------------------------------------------
+
+def stack_states(states):
+    """Stack same-shape state pytrees along a new leading axis.
+
+    On CPU backends the leaves are stacked host-side (np.stack over the
+    zero-copy views, ~5x cheaper than N expand+concat XLA dispatches -- the
+    same trade query._stack_states makes); on TPU they stay on device.
+    """
+    if jax.default_backend() == "tpu":
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    return jax.tree_util.tree_map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]), *states)
+
+
+def index_state(stacked, i: int):
+    """The i-th state of a stacked cohort."""
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+def zeros_like_stack(state, count: int):
+    """A (count, ...) stacked pytree of zeros shaped like ``state``."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((count,) + tuple(jnp.shape(x)), x.dtype), state)
+
+
+def scan_rounds(ingest_one: Callable, states, values, row_mask, keys):
+    """Generic (R rounds x S streams) ingest dispatch: ``lax.scan`` over
+    the round axis, ``vmap`` over the stream axis -- the execution shape
+    service.ingest.multi_round_update gave SJPC, for any estimator whose
+    single-stream update is ``ingest_one(state, values, mask, key)``."""
+    def body(carry, rnd):
+        vals, mask, ks = rnd
+        return jax.vmap(ingest_one)(carry, vals, mask, ks), None
+
+    carry, _ = jax.lax.scan(body, states, (values, row_mask, keys))
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# Sample-merge helper: deterministic weighted union of two uniform samples
+# ---------------------------------------------------------------------------
+
+def priority_merge_keys(items, tags, weight, salt: int):
+    """Selection keys for merging uniform samples (A-ES weighted draw).
+
+    Each retained sample item represents ``weight`` = n/m population
+    records; a uniform sample of the merged population keeps items with
+    probability proportional to represented mass.  A-ES realizes that as
+    top-k over keys u^(1/w) -- computed here as log(u)/w (monotone
+    equivalent, and f32-stable near 0 where u^(1/w) saturates at 1).
+    ``u`` is a hash of (slot index, item, tag, salt), NOT a PRNG draw, so
+    the merge is deterministic and symmetric: merge(a, b) selects the
+    same multiset as merge(b, a).  The slot index MUST be in the hash:
+    keyed on content alone, duplicate items (one epoch's worth of equal
+    pair-sim values, a cluster of identical records) would share one key
+    and survive or vanish as a block under top_k instead of
+    proportionally.  Invalid slots (tag < 0) get -inf keys.
+    """
+    slot = jnp.arange(items.shape[0], dtype=jnp.uint32)
+    h = (jnp.uint32(salt) ^ tags.astype(jnp.uint32)) \
+        + slot * jnp.uint32(0x9E3779B9)
+    for c in range(items.shape[-1]):
+        h = (h * jnp.uint32(0x9E3779B1)) ^ items[..., c].astype(jnp.uint32)
+    h = h * jnp.uint32(0x85EBCA77)
+    h ^= h >> 15
+    u = (h.astype(jnp.float32) + 1.0) / 4294967296.0       # (0, 1]
+    key = jnp.log(u) / jnp.maximum(weight, 1e-9)
+    return jnp.where(tags >= 0, key, -jnp.inf)
+
+
+def merge_tagged_samples(items_a, tags_a, n_a, items_b, tags_b, n_b,
+                         capacity: int, salt: int):
+    """Merge two tagged fixed-capacity uniform samples into one of
+    ``capacity`` slots: pool both, keep the top-``capacity`` priority keys
+    (weighted by represented population, see :func:`priority_merge_keys`).
+    Returns (items, tags) with empty slots tagged -1."""
+    m_a = jnp.sum((tags_a >= 0).astype(jnp.float32))
+    m_b = jnp.sum((tags_b >= 0).astype(jnp.float32))
+    w_a = jnp.asarray(n_a, jnp.float32) / jnp.maximum(m_a, 1.0)
+    w_b = jnp.asarray(n_b, jnp.float32) / jnp.maximum(m_b, 1.0)
+    items = jnp.concatenate([items_a, items_b], axis=0)
+    tags = jnp.concatenate([tags_a, tags_b], axis=0)
+    keys = jnp.concatenate([
+        priority_merge_keys(items_a, tags_a, w_a, salt),
+        priority_merge_keys(items_b, tags_b, w_b, salt)], axis=0)
+    _, top = jax.lax.top_k(keys, capacity)
+    sel_valid = jnp.take(tags, top) >= 0
+    return (jnp.take(items, top, axis=0),
+            jnp.where(sel_valid, jnp.take(tags, top), -1))
+
+
+# ---------------------------------------------------------------------------
+# Registry: estimator kinds -> factories over the group's SJPCConfig
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(kind: str, factory: Callable) -> None:
+    """factory(sjpc_cfg, params=None, estimator_cfg=None, opts=None)
+    -> Estimator.  ``estimator_cfg`` overrides the kind's derived config;
+    ``opts`` carries construction kwargs (dispatch flags etc.)."""
+    if kind in _REGISTRY:
+        raise ValueError(f"estimator kind {kind!r} already registered")
+    _REGISTRY[kind] = factory
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make(kind: str, sjpc_cfg, *, params=None, estimator_cfg=None,
+         opts=None) -> Estimator:
+    """Instantiate an estimator for a hash group.
+
+    ``sjpc_cfg`` is the group's :class:`~repro.core.sjpc.SJPCConfig`; it
+    defines (d, s, seed) for every kind and the byte budget competitors
+    match (equal space by construction).  ``params`` carries the group's
+    shared hash randomness (SJPC only).  ``estimator_cfg`` overrides the
+    derived per-kind config; ``opts`` carries construction kwargs (the
+    service's dispatch flags).  The service registry caches one instance
+    per (group, kind) so a group's streams share one engine and its jit
+    caches.
+    """
+    if kind not in _REGISTRY:
+        raise KeyError(
+            f"unknown estimator kind {kind!r}; available: {available()}")
+    return _REGISTRY[kind](sjpc_cfg, params=params,
+                           estimator_cfg=estimator_cfg, opts=opts)

@@ -1,0 +1,351 @@
+"""Streaming LSH-SS behind the Estimator protocol.
+
+The paper's stratified competitor (§2.3, Lee et al. [17], arXiv:1104.3212)
+is multi-pass offline: build LSH buckets over the values of a random
+column subset, then sample same-bucket ("high") and cross-bucket ("low")
+pairs and scale each stratum's similar fraction.  The one-pass variant
+served here maintains every ingredient online:
+
+  * a **bucket-count sketch**: one hashed counter per LSH bucket (the
+    values of the ``num_hash_cols`` chosen columns, avalanche-hashed into
+    ``num_buckets`` slots).  sum c_b(c_b - 1) estimates the same-stratum
+    ordered-pair count; hash collisions merge buckets, biasing the split
+    conservatively toward the same stratum (documented, bounded by the
+    load factor).  Linear, so merge/subtract are exact counter arithmetic.
+  * a **record reservoir** (Algorithm R, with each record's bucket id):
+    the online pair generator.  Every arriving record is paired with one
+    uniformly drawn stored record; the pair is a same- or cross-stratum
+    candidate by bucket equality.
+  * two **stratified pair reservoirs**: per stratum, Algorithm R over its
+    candidate pairs, storing only the pair's match count (int) -- the
+    similar fraction of each stratum at query time is a mask-and-count.
+
+Estimates: g_s = p1 * same_pairs + p2 * cross_pairs + n, exactly the
+offline formula (core/baselines.py:lsh_ss_g) with every term read from
+the online state.  No analytical error bound exists (the paper proves
+none for LSH-SS); stderr columns are zero.
+
+Sample-state algebra follows estimators.reservoir: provenance-tagged
+slots, deterministic weighted union on merge, tag-drop on subtract; the
+bucket counts merge/subtract linearly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sjpc import SJPCConfig
+
+from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
+                   scan_rounds)
+from .reservoir import reservoir_accept
+
+_MERGE_SALT = 0x15A55B01
+
+
+@dataclasses.dataclass(frozen=True)
+class LSHSSConfig:
+    d: int                     # record dimensionality
+    s: int                     # lowest queryable threshold
+    num_hash_cols: int = 1     # LSH column-subset size c, 1 <= c <= d
+    num_buckets: int = 1024    # hashed bucket counters (power of two)
+    record_capacity: int = 256   # record reservoir slots
+    pair_capacity: int = 256     # pair reservoir slots per stratum
+    seed: int = 0x5A5A
+
+    def __post_init__(self):
+        if not 1 <= self.s <= self.d:
+            raise ValueError(f"need 1 <= s={self.s} <= d={self.d}")
+        if not 1 <= self.num_hash_cols <= self.d:
+            raise ValueError(
+                f"num_hash_cols={self.num_hash_cols} outside [1, d={self.d}]"
+                " (the paper's LSH-SS hashes a random column subset)")
+        if self.num_buckets & (self.num_buckets - 1):
+            raise ValueError("num_buckets must be a power of two")
+        assert self.record_capacity >= 1 and self.pair_capacity >= 1
+
+
+class LSHSSState(NamedTuple):
+    counts: jax.Array        # (Bh,) int32 records per hashed bucket
+    rec_items: jax.Array     # (R, d) uint32 record reservoir
+    rec_bucket: jax.Array    # (R,) int32 bucket id of each stored record
+    rec_tags: jax.Array      # (R,) int32 provenance; -1 = empty
+    same_sim: jax.Array      # (M,) int32 match counts, same-bucket stratum
+    same_tags: jax.Array     # (M,) int32
+    same_seen: jax.Array     # int32 same-stratum candidates seen
+    cross_sim: jax.Array     # (M,) int32 match counts, cross-bucket stratum
+    cross_tags: jax.Array    # (M,) int32
+    cross_seen: jax.Array    # int32
+    n: jax.Array             # int32 records seen (exact: Algorithm R needs
+    #   true arrival indices -- see estimators.reservoir.ReservoirState.n)
+    sid: jax.Array           # int32 provenance tag for insertions
+    step: jax.Array          # int32
+
+
+class LSHSSEstimator(Estimator):
+    kind = "lsh_ss"
+    linear = False
+    supports_join = False
+
+    def __init__(self, cfg: LSHSSConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed ^ 0x15AC01)
+        self.cols = np.sort(rng.choice(cfg.d, size=cfg.num_hash_cols,
+                                       replace=False))
+        self._rounds_fn = jax.jit(
+            functools.partial(scan_rounds, self._ingest_one))
+
+    @property
+    def d(self) -> int:
+        return self.cfg.d
+
+    @property
+    def s(self) -> int:
+        return self.cfg.s
+
+    @property
+    def seed(self) -> int:
+        return self.cfg.seed
+
+    def memory_bytes(self) -> int:
+        c = self.cfg
+        return (c.num_buckets * 4 + c.record_capacity * (c.d + 2) * 4
+                + 2 * c.pair_capacity * 8)
+
+    # ------------------------------------------------------------------
+    def _bucket(self, values) -> jax.Array:
+        """Avalanche hash of the chosen columns' values -> bucket id."""
+        h = jnp.full(values.shape[:-1], 0x811C9DC5, jnp.uint32) \
+            ^ jnp.uint32(self.cfg.seed)
+        for c in self.cols:
+            h = (h * jnp.uint32(0x01000193)) \
+                ^ (values[..., int(c)].astype(jnp.uint32)
+                   + jnp.uint32(0x9E3779B1))
+        h ^= h >> 15
+        h = h * jnp.uint32(0x85EBCA77)
+        h ^= h >> 13
+        return (h & jnp.uint32(self.cfg.num_buckets - 1)).astype(jnp.int32)
+
+    def init(self, sid: int = 0) -> LSHSSState:
+        c = self.cfg
+        return LSHSSState(
+            counts=jnp.zeros((c.num_buckets,), jnp.int32),
+            rec_items=jnp.zeros((c.record_capacity, c.d), jnp.uint32),
+            rec_bucket=jnp.zeros((c.record_capacity,), jnp.int32),
+            rec_tags=jnp.full((c.record_capacity,), -1, jnp.int32),
+            same_sim=jnp.zeros((c.pair_capacity,), jnp.int32),
+            same_tags=jnp.full((c.pair_capacity,), -1, jnp.int32),
+            same_seen=jnp.zeros((), jnp.int32),
+            cross_sim=jnp.zeros((c.pair_capacity,), jnp.int32),
+            cross_tags=jnp.full((c.pair_capacity,), -1, jnp.int32),
+            cross_seen=jnp.zeros((), jnp.int32),
+            n=jnp.zeros((), jnp.int32),
+            sid=jnp.asarray(sid, jnp.int32),
+            step=jnp.zeros((), jnp.int32))
+
+    def _ingest_one(self, state: LSHSSState, values, mask,
+                    key) -> LSHSSState:
+        cfg = self.cfg
+        values = values.astype(jnp.uint32)
+        mask = mask.astype(jnp.int32)
+        maskb = mask != 0
+        bucket = self._bucket(values)                       # (B,)
+        counts = state.counts.at[jnp.where(maskb, bucket, 0)] \
+            .add(jnp.where(maskb, 1, 0))
+
+        kp, ks, kc, kr = jax.random.split(key, 4)
+        # pair one candidate per arriving record with a uniform stored one
+        # (drawn from the pre-batch reservoir; the first-ever batch sees an
+        # empty reservoir and generates no pairs -- documented)
+        partner = jax.random.randint(kp, mask.shape, 0, cfg.record_capacity)
+        p_ok = jnp.take(state.rec_tags, partner) >= 0
+        p_sim = jnp.sum(
+            (values == jnp.take(state.rec_items, partner, axis=0))
+            .astype(jnp.int32), axis=1)
+        p_same = jnp.take(state.rec_bucket, partner) == bucket
+
+        def pair_reservoir(k, cand, sims, tags, seen, sim_vals):
+            win, src, seen_new = reservoir_accept(
+                k, seen, cand.astype(jnp.int32), cfg.pair_capacity)
+            return (jnp.where(win, jnp.take(sim_vals, src), sims),
+                    jnp.where(win, state.sid, tags),
+                    seen_new)
+
+        same_sim, same_tags, same_seen = pair_reservoir(
+            ks, maskb & p_ok & p_same, state.same_sim, state.same_tags,
+            state.same_seen, p_sim)
+        cross_sim, cross_tags, cross_seen = pair_reservoir(
+            kc, maskb & p_ok & ~p_same, state.cross_sim, state.cross_tags,
+            state.cross_seen, p_sim)
+
+        win, src, n_new = reservoir_accept(
+            kr, state.n, mask, cfg.record_capacity)
+        taken = jnp.take(values, src, axis=0)
+        return LSHSSState(
+            counts=counts,
+            rec_items=jnp.where(win[:, None], taken, state.rec_items),
+            rec_bucket=jnp.where(win, jnp.take(bucket, src),
+                                 state.rec_bucket),
+            rec_tags=jnp.where(win, state.sid, state.rec_tags),
+            same_sim=same_sim, same_tags=same_tags, same_seen=same_seen,
+            cross_sim=cross_sim, cross_tags=cross_tags,
+            cross_seen=cross_seen,
+            n=n_new, sid=state.sid,
+            step=state.step + 1)
+
+    def ingest_rounds(self, states, values, row_mask, keys):
+        return self._rounds_fn(states, jnp.asarray(values),
+                               jnp.asarray(row_mask), keys)
+
+    # -- algebra -------------------------------------------------------
+    def _merge_sample(self, items_a, tags_a, n_a, items_b, tags_b, n_b,
+                      capacity):
+        return merge_tagged_samples(items_a, tags_a, n_a, items_b, tags_b,
+                                    n_b, capacity,
+                                    _MERGE_SALT ^ self.cfg.seed)
+
+    def merge(self, a: LSHSSState, b: LSHSSState) -> LSHSSState:
+        cfg = self.cfg
+        # record reservoir: carry the bucket id as an extra merged column
+        rec_a = jnp.concatenate(
+            [a.rec_items, a.rec_bucket.astype(jnp.uint32)[:, None]], axis=1)
+        rec_b = jnp.concatenate(
+            [b.rec_items, b.rec_bucket.astype(jnp.uint32)[:, None]], axis=1)
+        rec, rec_tags = self._merge_sample(rec_a, a.rec_tags, a.n,
+                                           rec_b, b.rec_tags, b.n,
+                                           cfg.record_capacity)
+        same, same_tags = self._merge_sample(
+            a.same_sim.astype(jnp.uint32)[:, None], a.same_tags, a.same_seen,
+            b.same_sim.astype(jnp.uint32)[:, None], b.same_tags, b.same_seen,
+            cfg.pair_capacity)
+        cross, cross_tags = self._merge_sample(
+            a.cross_sim.astype(jnp.uint32)[:, None], a.cross_tags,
+            a.cross_seen,
+            b.cross_sim.astype(jnp.uint32)[:, None], b.cross_tags,
+            b.cross_seen, cfg.pair_capacity)
+        return LSHSSState(
+            counts=a.counts + b.counts,
+            rec_items=rec[:, :cfg.d],
+            rec_bucket=rec[:, cfg.d].astype(jnp.int32),
+            rec_tags=rec_tags,
+            same_sim=same[:, 0].astype(jnp.int32), same_tags=same_tags,
+            same_seen=a.same_seen + b.same_seen,
+            cross_sim=cross[:, 0].astype(jnp.int32), cross_tags=cross_tags,
+            cross_seen=a.cross_seen + b.cross_seen,
+            n=a.n + b.n, sid=jnp.maximum(a.sid, b.sid),
+            step=a.step + b.step)
+
+    def subtract(self, a: LSHSSState, b: LSHSSState) -> LSHSSState:
+        drop = b.sid
+        return LSHSSState(
+            counts=a.counts - b.counts,
+            rec_items=a.rec_items, rec_bucket=a.rec_bucket,
+            rec_tags=jnp.where(a.rec_tags == drop, -1, a.rec_tags),
+            same_sim=a.same_sim,
+            same_tags=jnp.where(a.same_tags == drop, -1, a.same_tags),
+            same_seen=jnp.maximum(a.same_seen - b.same_seen, 0),
+            cross_sim=a.cross_sim,
+            cross_tags=jnp.where(a.cross_tags == drop, -1, a.cross_tags),
+            cross_seen=jnp.maximum(a.cross_seen - b.cross_seen, 0),
+            n=jnp.maximum(a.n - b.n, 0), sid=a.sid, step=a.step)
+
+    # -- estimation ----------------------------------------------------
+    def _table(self, counts, same_sim, same_tags, cross_sim, cross_tags,
+               n) -> EstimateTable:
+        """Vectorized numpy: stratum totals from the bucket counts, per-
+        stratum level fractions from the pair reservoirs, Eq. of §2.3."""
+        counts = counts.astype(np.float64)
+        same_pairs = (counts * (counts - 1)).sum(axis=-1)       # ordered
+        total = n * (n - 1)
+        cross_pairs = np.maximum(total - same_pairs, 0.0)
+        levels = np.arange(self.d + 1)
+
+        def level_fracs(sim, tags):
+            ok = tags >= 0
+            m = ok.sum(axis=-1).astype(np.float64)
+            hits = ((sim[..., None] == levels) & ok[..., None]) \
+                .sum(axis=-2).astype(np.float64)                # (N, d+1)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                return np.where(m[:, None] > 0, hits / m[:, None], 0.0), hits
+
+        f1, y1 = level_fracs(same_sim, same_tags)
+        f2, _ = level_fracs(cross_sim, cross_tags)
+        x_full = f1 * same_pairs[:, None] + f2 * cross_pairs[:, None]
+        x = x_full[:, self.s:]
+        g = np.cumsum(x[:, ::-1], axis=1)[:, ::-1] + n[:, None]
+        zeros = np.zeros_like(x)
+        return EstimateTable(x=x, g=g, y=y1[:, self.s:], n=n,
+                             stderr=zeros, stderr_offline=zeros)
+
+    def estimate_batch(self, states, *, clamp: bool = True,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> EstimateTable:
+        del clamp, use_pallas, interpret           # pure host-numpy math
+        get = lambda a: np.asarray(jax.device_get(a))
+        return self._table(get(states.counts), get(states.same_sim),
+                           get(states.same_tags), get(states.cross_sim),
+                           get(states.cross_tags),
+                           get(states.n).astype(np.float64))
+
+    def estimate_ref(self, state: LSHSSState, *,
+                     clamp: bool = True) -> EstimateTable:
+        """Scalar python-loop oracle for the batched numpy path."""
+        del clamp
+        get = lambda a: np.asarray(jax.device_get(a))
+        counts = get(state.counts).astype(np.int64)
+        n = float(get(state.n))
+        same_pairs = float((counts * (counts - 1)).sum())
+        cross_pairs = max(n * (n - 1) - same_pairs, 0.0)
+        x = np.zeros(self.d + 1)
+        y = np.zeros(self.d + 1)
+        for sim, tags, pairs, record_y in (
+                (get(state.same_sim), get(state.same_tags), same_pairs, True),
+                (get(state.cross_sim), get(state.cross_tags), cross_pairs,
+                 False)):
+            ok = tags >= 0
+            m = int(ok.sum())
+            for k in range(self.d + 1):
+                hits = int(((sim == k) & ok).sum())
+                if record_y:
+                    y[k] = hits
+                if m > 0:
+                    x[k] += hits / m * pairs
+        xs = x[self.s:]
+        g = np.array([xs[i:].sum() + n for i in range(self.num_levels)])
+        zeros = np.zeros((1, self.num_levels))
+        return EstimateTable(x=xs[None], g=g[None], y=y[self.s:][None],
+                             n=np.array([n]), stderr=zeros,
+                             stderr_offline=zeros)
+
+
+def derive_config(sjpc_cfg: SJPCConfig, *, num_hash_cols: int = 1) -> LSHSSConfig:
+    """Split the group's SJPC byte budget across the three structures:
+    ~half to the record reservoir, ~quarter to the pair reservoirs,
+    the rest to bucket counters (capped at 1024 buckets)."""
+    budget = sjpc_cfg.counters_bytes
+    d = sjpc_cfg.d
+    num_buckets = 1024
+    while num_buckets * 4 > max(budget // 4, 64):
+        num_buckets //= 2
+    record_capacity = max(1, (budget // 2) // ((d + 2) * 4))
+    pair_capacity = max(1, (budget // 4) // (2 * 8))
+    return LSHSSConfig(d=d, s=sjpc_cfg.s, num_hash_cols=num_hash_cols,
+                       num_buckets=max(num_buckets, 16),
+                       record_capacity=record_capacity,
+                       pair_capacity=pair_capacity, seed=sjpc_cfg.seed)
+
+
+def _factory(sjpc_cfg: SJPCConfig, *, params=None, estimator_cfg=None,
+             opts=None):
+    del params, opts          # host-numpy estimation: no dispatch flags
+    if estimator_cfg is None:
+        estimator_cfg = derive_config(sjpc_cfg)
+    return LSHSSEstimator(estimator_cfg)
+
+
+register("lsh_ss", _factory)

@@ -1,0 +1,237 @@
+"""Streaming uniform record sampling behind the Estimator protocol.
+
+The paper's one-pass competitor (§2.1, Fig. 8): keep R records chosen
+uniformly without replacement from the stream (Vitter's Algorithm R), and
+estimate x[k] as the sample's all-pairs similarity histogram scaled by
+n(n-1)/(m(m-1)).  PRs 0-3 carried this only as an offline batch function
+(``baselines.random_sampling_pair_counts``); this module is the *served*
+version: state is a fixed-shape pytree, ingest is one jit'd vectorized
+dispatch per flush, and the query hot path -- previously O(R^2 d) host
+numpy -- is the fused all-pairs kernel (kernels/fused_pairs.py).
+
+Vectorized Algorithm R: record with global arrival index g (0-based) is
+accepted with probability min(1, R/(g+1)) into a uniform random slot;
+within a batch all accept/slot draws are independent given the starting
+count, so the whole batch resolves in one pass -- per slot, the *latest*
+accepted candidate wins (a scatter-max over arrival order), which is
+exactly sequential processing.  Distributional equivalence to offline
+uniform sampling is pinned statistically in tests/test_estimators.py.
+
+Epoch algebra: inserted items are tagged with the state's ``sid``
+(provenance).  ``merge`` is the deterministic weighted union of
+base.merge_tagged_samples; ``subtract(a, b)`` drops a's items tagged with
+b's sid -- exact for the per-epoch states the sliding window hands it
+(dropping one component of a uniform sample of a union leaves a uniform
+sample of the rest), at the honest streaming cost that expired slots
+cannot be refilled from data the sample never kept.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact
+from repro.core.sjpc import SJPCConfig
+
+from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
+                   scan_rounds)
+
+_MERGE_SALT = 0x7E5E4B01
+
+
+@dataclasses.dataclass(frozen=True)
+class ReservoirConfig:
+    d: int                   # record dimensionality
+    s: int                   # lowest queryable threshold
+    capacity: int            # reservoir slots R
+    seed: int = 0x5A5A
+
+    def __post_init__(self):
+        assert 1 <= self.s <= self.d, "need 1 <= s <= d"
+        assert self.capacity >= 1, "reservoir needs at least one slot"
+
+
+class ReservoirState(NamedTuple):
+    items: jax.Array         # (R, d) uint32 stored records
+    tags: jax.Array          # (R,) int32 provenance sid; -1 = empty slot
+    n: jax.Array             # int32 records seen.  Exact integer on
+    #   purpose: Algorithm R's acceptance probability R/(g+1) needs the
+    #   true arrival index (a float32 n freezes at 2^24 and would skew
+    #   retention toward recent records); int32 is exact to 2^31.
+    sid: jax.Array           # int32 provenance tag for new insertions
+    step: jax.Array          # int32 PRNG folding counter
+
+
+def reservoir_accept(key, n0, mask, capacity: int):
+    """One batch of vectorized Algorithm R bookkeeping.
+
+    mask (B,) int32 marks candidate rows; ``n0`` (int32 scalar) is the
+    stream count before the batch.  Returns (win (R,) bool, src (R,)
+    int32 batch row feeding each winning slot, n_new): per slot the
+    latest accepted candidate wins, which is bit-equivalent to processing
+    the batch sequentially.  Shared by the record reservoir here and the
+    stratified pair reservoirs of estimators.lsh_ss.
+    """
+    B = mask.shape[0]
+    maskb = mask != 0
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1       # index among candidates
+    gidx = n0 + pos                                    # global arrival index
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (B,))
+    rand_slot = jax.random.randint(ks, (B,), 0, capacity)
+    accept = maskb & ((gidx < capacity)
+                      | (u * (gidx + 1).astype(jnp.float32) < capacity))
+    slot = jnp.where(gidx < capacity, jnp.clip(gidx, 0, capacity - 1),
+                     rand_slot)
+    order = jnp.where(accept, pos, -1)
+    best = jnp.full((capacity,), -1, jnp.int32).at[slot].max(order)
+    # map winning candidate index -> batch row (candidate indices are
+    # unique among masked rows; masked-out rows scatter into the spare
+    # B-th slot that is never read)
+    row_of = jnp.zeros((B + 1,), jnp.int32) \
+        .at[jnp.where(maskb, pos, B)].set(jnp.arange(B, dtype=jnp.int32))
+    win = best >= 0
+    src = jnp.take(row_of, jnp.clip(best, 0, B))
+    return win, src, n0 + jnp.sum(mask.astype(jnp.int32))
+
+
+class ReservoirEstimator(Estimator):
+    kind = "reservoir"
+    linear = False
+    supports_join = False
+
+    def __init__(self, cfg: ReservoirConfig, *,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self._rounds_fn = jax.jit(
+            functools.partial(scan_rounds, self._ingest_one))
+
+    @property
+    def d(self) -> int:
+        return self.cfg.d
+
+    @property
+    def s(self) -> int:
+        return self.cfg.s
+
+    @property
+    def seed(self) -> int:
+        return self.cfg.seed
+
+    def memory_bytes(self) -> int:
+        # items + tags; n/sid/step are O(1) scalars
+        return self.cfg.capacity * (self.cfg.d + 1) * 4
+
+    # -- protocol ------------------------------------------------------
+    def init(self, sid: int = 0) -> ReservoirState:
+        R, d = self.cfg.capacity, self.cfg.d
+        return ReservoirState(
+            items=jnp.zeros((R, d), jnp.uint32),
+            tags=jnp.full((R,), -1, jnp.int32),
+            n=jnp.zeros((), jnp.int32),
+            sid=jnp.asarray(sid, jnp.int32),
+            step=jnp.zeros((), jnp.int32))
+
+    def _ingest_one(self, state: ReservoirState, values, mask,
+                    key) -> ReservoirState:
+        values = values.astype(jnp.uint32)
+        win, src, n_new = reservoir_accept(
+            key, state.n, mask.astype(jnp.int32), self.cfg.capacity)
+        taken = jnp.take(values, src, axis=0)
+        return ReservoirState(
+            items=jnp.where(win[:, None], taken, state.items),
+            tags=jnp.where(win, state.sid, state.tags),
+            n=n_new,
+            sid=state.sid,
+            step=state.step + 1)
+
+    def ingest_rounds(self, states, values, row_mask, keys):
+        return self._rounds_fn(states, jnp.asarray(values),
+                               jnp.asarray(row_mask), keys)
+
+    def merge(self, a: ReservoirState, b: ReservoirState) -> ReservoirState:
+        items, tags = merge_tagged_samples(
+            a.items, a.tags, a.n, b.items, b.tags, b.n,
+            self.cfg.capacity, _MERGE_SALT ^ self.cfg.seed)
+        return ReservoirState(items=items, tags=tags, n=a.n + b.n,
+                              sid=jnp.maximum(a.sid, b.sid),
+                              step=a.step + b.step)
+
+    def subtract(self, a: ReservoirState, b: ReservoirState) -> ReservoirState:
+        keep = a.tags != b.sid
+        return ReservoirState(
+            items=a.items,
+            tags=jnp.where(keep, a.tags, -1),
+            n=jnp.maximum(a.n - b.n, 0),
+            sid=a.sid, step=a.step)
+
+    # -- estimation ----------------------------------------------------
+    def _table(self, hist: np.ndarray, n: np.ndarray,
+               m: np.ndarray) -> EstimateTable:
+        """hist (N, d+1) float64 sample pair counts -> the (N, L) table.
+        Scale n(n-1)/(m(m-1)); m < 2 yields the zero histogram (the
+        empty-stream guard of baselines.random_sampling_pair_counts)."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            scale = np.where(m >= 2, n * (n - 1)
+                             / np.maximum(m * (m - 1), 1.0), 0.0)
+        x_full = hist * scale[:, None]                     # (N, d+1)
+        x = x_full[:, self.s:]
+        g = np.cumsum(x[:, ::-1], axis=1)[:, ::-1] + n[:, None]
+        zeros = np.zeros_like(x)
+        return EstimateTable(x=x, g=g, y=hist[:, self.s:], n=n,
+                             stderr=zeros, stderr_offline=zeros)
+
+    def estimate_batch(self, states, *, clamp: bool = True,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> EstimateTable:
+        del clamp                                  # counts are >= 0 already
+        from repro.kernels.ops import fused_pairs
+        tags = np.asarray(jax.device_get(states.tags))
+        valid = (tags >= 0).astype(np.int32)
+        hist = np.asarray(jax.device_get(fused_pairs(
+            jax.device_get(states.items), valid,
+            use_pallas=self.use_pallas if use_pallas is None else use_pallas,
+            interpret=self.interpret if interpret is None else interpret,
+        ))).astype(np.float64)
+        n = np.asarray(jax.device_get(states.n), np.float64)
+        return self._table(hist, n, valid.sum(axis=1).astype(np.float64))
+
+    def estimate_ref(self, state: ReservoirState, *,
+                     clamp: bool = True) -> EstimateTable:
+        """O(m^2 d) numpy oracle: brute-force histogram of the valid
+        sample (core.exact), then the identical scaling."""
+        del clamp
+        tags = np.asarray(jax.device_get(state.tags))
+        items = np.asarray(jax.device_get(state.items))[tags >= 0]
+        hist = (exact.brute_force_pair_counts(items) if items.shape[0]
+                else np.zeros(self.d + 1))
+        n = np.array([self.state_n(state)], np.float64)
+        return self._table(hist[None], n,
+                           np.array([items.shape[0]], np.float64))
+
+
+def capacity_for_bytes(sjpc_cfg: SJPCConfig) -> int:
+    """The Fig. 8 equal-space rule, served: the records (plus provenance
+    tag) storable in the byte budget of the group's SJPC counters."""
+    return max(1, sjpc_cfg.counters_bytes // ((sjpc_cfg.d + 1) * 4))
+
+
+def _factory(sjpc_cfg: SJPCConfig, *, params=None, estimator_cfg=None,
+             opts=None):
+    del params                               # no shared hash randomness
+    if estimator_cfg is None:
+        estimator_cfg = ReservoirConfig(
+            d=sjpc_cfg.d, s=sjpc_cfg.s, capacity=capacity_for_bytes(sjpc_cfg),
+            seed=sjpc_cfg.seed)
+    return ReservoirEstimator(estimator_cfg, **(dict(opts) if opts else {}))
+
+
+register("reservoir", _factory)

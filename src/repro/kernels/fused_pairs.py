@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused all-pairs similarity histogram of a reservoir.
+
+The reservoir-sampling estimator's query hot path: given the stored sample
+of a stream -- items (R, d) plus a validity mask -- count, for every level
+k in [0, d], the ordered pairs (i != j, both valid) whose records agree on
+exactly k columns.  The scaled suffix sums of that histogram are the
+estimator's x[k] / g_s table (core/baselines.py eq.; DESIGN.md §13.3).
+
+Done naively on host numpy this is O(R^2 d) Python-driven work per query;
+here it is ONE kernel launch over stacked samples:
+
+  grid (N, i_tiles, j_tiles):
+    stream axis     -- parallel; each stream owns an (R, d) sample slab
+    i/j tile axes   -- sequential; the (d+1,) histogram accumulator stays
+                       resident in VMEM while every (block_r, block_r) pair
+                       tile of the R x R match matrix reduces into it
+
+  per cell:  the Hamming-match tile  M[a, b] = #{c : A[a, c] == B[b, c]}
+             builds column-by-column on the VPU (d is static and small);
+             pair validity (both slots live, a != b on the diagonal tile)
+             masks it, and the histogram bin counts come from ONE MXU
+             contraction -- ones(1, block_r^2) @ onehot(block_r^2, d+1) --
+             so the R^2-sized match matrix never leaves the chip.
+
+Counts are exact: the per-tile one-hot contraction accumulates at most
+block_r^2 <= 2^14 in f32 (integral, < 2^24), and cross-tile accumulation is
+int32.  The pure-jnp fallback (kernels/ref.py:fused_pairs_ref) is
+bit-identical; both are tested against the O(n^2) numpy oracle
+(core/exact.py:brute_force_pair_counts) across depths/widths/empty inputs
+in tests/test_fused_pairs.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 128
+
+
+def _kernel(items_i_ref, items_j_ref, valid_i_ref, valid_j_ref, out_ref,
+            *, d: int, block_r: int):
+    gi, gj = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(jnp.logical_and(gi == 0, gj == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = items_i_ref[0]                                   # (BR, d) uint32
+    b = items_j_ref[0]                                   # (BR, d) uint32
+    # Hamming-match tile, column by column (d is static and tiny)
+    match = jnp.zeros((block_r, block_r), jnp.int32)
+    for c in range(d):
+        match += (a[:, c:c + 1] == b[None, :, c]).astype(jnp.int32)
+
+    # pair validity: both slots live, and not the self-pair on the diagonal
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_r, block_r), 0) \
+        + gi * block_r
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_r, block_r), 1) \
+        + gj * block_r
+    ok = (valid_i_ref[0][:, None] != 0) & (valid_j_ref[0][None, :] != 0) \
+        & (row != col)
+
+    # bin into the histogram with one MXU contraction:
+    # ones(1, BR^2) @ onehot(BR^2, d+1); per-tile counts <= BR^2 < 2^24 so
+    # the f32 accumulation is exact, then int32 across tiles
+    flat = jnp.where(ok, match, -1).reshape(-1)          # -1 = masked out
+    onehot = (flat[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], d + 1), 1)
+              ).astype(jnp.float32)
+    counts = jnp.dot(jnp.ones((1, flat.shape[0]), jnp.float32), onehot,
+                     preferred_element_type=jnp.float32)  # (1, d+1)
+    out_ref[0, :] += counts[0].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def fused_pairs_pallas(items, valid, *, block_r: int = DEFAULT_BLOCK_R,
+                       interpret: bool = True):
+    """(N, R, d) samples x (N, R) validity -> (N, d+1) int32 histograms.
+
+    out[i, k] = #ordered pairs (a != b, both valid) of stream i's sample
+    agreeing on exactly k columns.  ``interpret=True`` is the
+    CPU-correctness mode (this container); on real TPU pass interpret=False.
+    """
+    N, R, d = items.shape
+    assert valid.shape == (N, R), (valid.shape, (N, R))
+    items = items.astype(jnp.uint32)
+    valid = valid.astype(jnp.int32)
+    block_r = min(block_r, max(R, 8))
+    pad_r = (-R) % block_r
+    if pad_r:                     # padded slots carry valid=0: contribute 0
+        items = jnp.pad(items, ((0, 0), (0, pad_r), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad_r)))
+    r_pad = R + pad_r
+
+    tiles = r_pad // block_r
+    kernel = functools.partial(_kernel, d=d, block_r=block_r)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, tiles, tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_r, d), lambda n, gi, gj: (n, gi, 0)),
+            pl.BlockSpec((1, block_r, d), lambda n, gi, gj: (n, gj, 0)),
+            pl.BlockSpec((1, block_r), lambda n, gi, gj: (n, gi)),
+            pl.BlockSpec((1, block_r), lambda n, gi, gj: (n, gj)),
+        ],
+        out_specs=pl.BlockSpec((1, d + 1), lambda n, gi, gj: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d + 1), jnp.int32),
+        interpret=interpret,
+    )(items, items, valid, valid)

@@ -16,6 +16,7 @@ from repro.core.sketch import SketchParams
 from . import ref
 from .fingerprint import fingerprint_pallas
 from .fused_ingest import fused_ingest_pallas
+from .fused_pairs import fused_pairs_pallas
 from .fused_query import fused_query_pallas
 from .sketch_update import sketch_update_pallas
 from .sketch_moments import sketch_moments_pallas
@@ -115,6 +116,27 @@ def fused_query(counters_a, counters_b=None, *, use_pallas=None,
     kwargs = {} if block_w is None else {"block_w": block_w}
     return fused_query_pallas(counters_a, counters_b, interpret=interpret,
                               **kwargs)
+
+
+def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
+                block_r=None):
+    """All-pairs similarity histogram of stacked reservoir samples.
+
+    items (N, R, d) uint32, valid (N, R) -> (N, d+1) int32 counts of
+    ordered valid pairs agreeing on exactly k columns (the reservoir
+    estimator's query hot path).  Pallas keeps the histogram accumulator
+    VMEM-resident across pair tiles; the fallback is the jnp per-column
+    reduction (bit-identical -- both are exact integer counts).
+    """
+    if items.shape[1] == 0:                    # empty sample: zero histogram
+        return jnp.zeros((items.shape[0], items.shape[2] + 1), jnp.int32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.fused_pairs_ref(jnp.asarray(items), jnp.asarray(valid))
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    kwargs = {} if block_r is None else {"block_r": block_r}
+    return fused_pairs_pallas(items, valid, interpret=interpret, **kwargs)
 
 
 def make_sjpc_update_fn(*, use_pallas=None, interpret=None):

@@ -63,6 +63,35 @@ def sketch_moments_ref(counters_a, counters_b):
                    axis=-1)
 
 
+def fused_pairs_ref(items, valid):
+    """All-pairs similarity histograms of stacked samples (reservoir query).
+
+    items (N, R, d) uint32; valid (N, R) int32 -> (N, d+1) int32:
+    out[i, k] = #ordered pairs (a != b, both slots valid) of stream i's
+    sample whose records agree on exactly k columns.  Bit-identical to the
+    Pallas kernel (both count in exact integer arithmetic); the O(n^2)
+    numpy oracle is core.exact.brute_force_pair_counts per sample.
+    """
+    items = items.astype(jnp.uint32)
+    N, R, d = items.shape
+    if R == 0:
+        return jnp.zeros((N, d + 1), jnp.int32)
+    valid = valid.astype(jnp.int32)
+    # (N, R, R) match counts, built per column to avoid an (N, R, R, d) blob
+    match = jnp.zeros((N, R, R), jnp.int32)
+    for c in range(d):
+        match += (items[:, :, None, c] == items[:, None, :, c]) \
+            .astype(jnp.int32)
+    ok = (valid[:, :, None] != 0) & (valid[:, None, :] != 0) \
+        & ~jnp.eye(R, dtype=bool)[None]
+    flat = jnp.where(ok, match, -1)                        # -1 = masked out
+    # bin per level (d+1 passes over the (N, R, R) match tensor) rather
+    # than one (N, R, R, d+1) one-hot -- at reservoir capacities R ~ 2.6k
+    # that blob would be ~200 MB per query on the CPU path
+    return jnp.stack([jnp.sum((flat == k).astype(jnp.int32), axis=(1, 2))
+                      for k in range(d + 1)], axis=1)
+
+
 def fused_query_ref(counters_a, counters_b):
     """Batched multi-level row moments: (N, L, t, w) x (N, L, t, w) ->
     (N, L, t) float32.  Oracle for the fused query kernel; bit-identical to

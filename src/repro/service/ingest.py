@@ -1,14 +1,16 @@
 """Batched ingest: double-buffered submission, fixed-shape coalescing, and
-ONE jit'd device dispatch per flush.
+ONE jit'd device dispatch per estimator cohort per flush.
 
 Why batch across tenants: each tenant's trickle of records is far too small
 to saturate a device, and per-tenant dispatches pay per-call overhead S
 times.  The pipeline stacks every stream of a hash group along a leading
-axis -- counters (S, levels, t, w), records (R, S, B, d), row masks
+axis -- states (S, ...) pytrees, records (R, S, B, d), row masks
 (R, S, B), per-(round, stream) PRNG keys (R, S) -- and consumes ALL R
-coalesced rounds of a flush in one ``lax.scan`` inside one jit
-(:func:`multi_round_update`), vmapping the single-stream update over the
-stream axis.  The inner update is the **fused** ingest path by default
+coalesced rounds of a flush in one ``Estimator.ingest_rounds`` dispatch
+per **estimator cohort** (streams of one kind; DESIGN.md §13.4).  A group
+whose streams all run SJPC -- the default -- is exactly one ``lax.scan``
+inside one jit (:func:`multi_round_update`), vmapping the single-stream
+update over the stream axis, bit-identical to the pre-protocol pipeline.  The inner update is the **fused** ingest path by default
 (``sjpc.update_fused``: fingerprint -> multi-level sketch in one kernel
 launch on TPU, the fused-scatter formulation elsewhere); the original
 per-level ``sjpc.update`` stays available behind ``use_fused=False`` as the
@@ -51,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCParams, SJPCState
+from repro.estimators import index_state, stack_states
 from repro.kernels.ops import make_sjpc_update_fn
 
 from .registry import HashGroup, StreamEntry
@@ -195,14 +198,20 @@ class IngestPipeline:
         return sum(r.shape[0] for chunks in self._front.values() for r in chunks)
 
     # ------------------------------------------------------------------
-    def flush(self, entries: list[StreamEntry]) -> dict[str, SJPCState]:
+    def flush(self, entries: list[StreamEntry]) -> dict:
         """Drain the queued records of ``entries`` (all streams of this
-        group, in uid order) and return each stream's new cumulative state.
+        group, in uid order) and return each stream's new ingest state
+        (cumulative window for linear estimators, open-epoch state for
+        windowed sample estimators -- whatever ``window.ingest_base``
+        hands out).
 
-        Every stream participates in every round (static S for jit shape
-        stability); streams with no remaining records ride along fully
-        masked.  ``entry.flushes`` counts *rounds* consumed, and is the
-        replay coordinate for :func:`ingest_key`.
+        Streams dispatch in **estimator cohorts**: every stream of one
+        estimator kind shares one batched ``ingest_rounds`` call (static S
+        per cohort for jit shape stability); streams with no remaining
+        records ride along fully masked.  An all-SJPC group is exactly the
+        PR 2 single-dispatch path, bit for bit.  ``entry.flushes`` counts
+        *rounds* consumed, and is the replay coordinate for
+        :func:`ingest_key`.
         """
         self._front, self._back = self._back, self._front
         pending = {name: (np.concatenate(chunks) if chunks else
@@ -211,14 +220,27 @@ class IngestPipeline:
         self._back = {}
 
         entries = sorted(entries, key=lambda e: e.uid)
+        out = {e.name: e.window.ingest_base() for e in entries}
+        # cohorts key on the estimator INSTANCE: streams of one kind but
+        # with an explicit estimator_cfg override are distinct cohorts
+        # (different state shapes / seeds must not share a dispatch)
+        cohorts: dict[int, list[StreamEntry]] = {}
+        for e in entries:
+            cohorts.setdefault(id(e.estimator), []).append(e)
+        self.stats["flushes"] += 1
+        for cohort in cohorts.values():
+            self._flush_cohort(cohort, pending, out)
+        return out
+
+    def _flush_cohort(self, entries: list[StreamEntry], pending: dict,
+                      out: dict) -> None:
         B, cfg = self.batch_rows, self.group.cfg
+        est = entries[0].estimator
         counts = [pending.get(e.name, np.zeros((0, cfg.d), np.uint32)).shape[0]
                   for e in entries]
         rounds = max((-(-c // B) for c in counts if c), default=0)
-        out = {e.name: e.window.total for e in entries}
         if rounds == 0:
-            self.stats["flushes"] += 1
-            return out
+            return
 
         S = len(entries)
         values = np.zeros((rounds, S, B, cfg.d), np.uint32)
@@ -236,21 +258,14 @@ class IngestPipeline:
             e.records += int(rows.shape[0])
 
         keys = ingest_key_grid(
-            jnp.uint32(cfg.seed ^ _INGEST_SALT),
+            jnp.uint32(est.ingest_seed),
             jnp.asarray([e.uid for e in entries], jnp.int32),
             jnp.asarray(round_idx))
-        counters = jnp.stack([out[e.name].counters for e in entries])
-        n = jnp.stack([out[e.name].n for e in entries])
-        steps = jnp.stack([out[e.name].step for e in entries])
-        counters, n, steps = multi_round_update(
-            cfg, self.group.params, counters, n, steps,
-            jnp.asarray(values), jnp.asarray(mask), keys,
-            use_pallas=self.use_pallas, interpret=self.interpret,
-            use_fused=self.use_fused, shards=self.shards)
+        states = stack_states([out[e.name] for e in entries])
+        states = est.ingest_rounds(states, jnp.asarray(values),
+                                   jnp.asarray(mask), keys)
         self.stats["rounds"] += rounds
         self.stats["dispatches"] += 1
         self.stats["dispatch_rows"] += S * B * rounds
-        self.stats["flushes"] += 1
         for i, e in enumerate(entries):
-            out[e.name] = SJPCState(counters[i], n[i], steps[i])
-        return out
+            out[e.name] = index_state(states, i)

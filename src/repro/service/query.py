@@ -35,32 +35,16 @@ paper proves no join-specific bound; DESIGN.md §10.4).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import NamedTuple
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import sjpc
-from repro.core.sjpc import SJPCConfig, SJPCState
+from repro.core.sjpc import SJPCConfig
+from repro.estimators import Estimator, stack_states
 
 from .registry import StreamRegistry
 
 _CACHE_MAX_ENTRIES = 4096      # shared-cache bound; cleared wholesale beyond
-
-
-def _stack_states(counters_list):
-    """Stack per-stream counter arrays into the (N, L, t, w) batch tensor.
-
-    On CPU backends a host-side ``np.stack`` of the (zero-copy) array views
-    is ~5x cheaper than dispatching N expand+concat XLA ops; on TPU the
-    counters live in device memory, so ``jnp.stack`` avoids a host round
-    trip and the batch is formed on-device.
-    """
-    if jax.default_backend() == "tpu":
-        return jnp.stack(counters_list)
-    return np.stack([np.asarray(c) for c in counters_list])
 
 
 class QueryResult(NamedTuple):
@@ -75,21 +59,13 @@ class QueryResult(NamedTuple):
     window_epochs: tuple       # live epochs per stream (coverage metadata)
 
 
-def _stderr(cfg: SJPCConfig, s: int, n: float, g: float) -> tuple[float, float]:
-    """(online, offline) absolute 1-sigma bounds at plug-in g."""
-    if g <= 0:
-        return 0.0, 0.0
-    off = math.sqrt(sjpc.offline_variance_bound(cfg.d, s, cfg.ratio, g)) * g
-    on = math.sqrt(sjpc.online_variance_bound(
-        cfg.d, s, cfg.ratio, cfg.width, n, g)) * g
-    return on, off
-
-
 @dataclasses.dataclass(frozen=True)
 class _StreamView:
     name: str
-    cfg: SJPCConfig
-    state: SJPCState
+    cfg: SJPCConfig            # the group's config (thresholds, join params)
+    state: object              # the stream's windowed estimator state
+    estimator: Estimator       # the stream's protocol engine
+    kind: str                  # estimator kind (batch cohort key)
     n: float
     live_epochs: int
     window_epochs: int | None
@@ -125,27 +101,29 @@ class Snapshot:
         return self._views[name]
 
     # -- fused batched path --------------------------------------------
-    def _group_views(self, group_id: str) -> list[_StreamView]:
-        return [v for v in self._views.values() if v.group_id == group_id]
+    def _cohort_views(self, group_id: str, eid: int) -> list[_StreamView]:
+        # cohorts key on the estimator INSTANCE (id), not the kind: a
+        # same-kind stream with an explicit estimator_cfg override has its
+        # own engine (and possibly state shapes) and must batch separately
+        return [v for v in self._views.values()
+                if v.group_id == group_id and id(v.estimator) == eid]
 
-    def _self_batch(self, group_id: str, clamp: bool):
-        """The one compiled call answering every (stream, threshold) cell of
-        a hash group; memoized by the member windows' versions (shared
-        engine cache) and per-snapshot (versions are fixed within one
-        snapshot, so repeated queries skip rebuilding the version key)."""
-        local_key = (group_id, clamp)
+    def _self_batch(self, group_id: str, eid: int, clamp: bool):
+        """The one batched call answering every (stream, threshold) cell of
+        a hash group's estimator cohort; memoized by the member windows'
+        versions (shared engine cache) and per-snapshot (versions are fixed
+        within one snapshot, so repeated queries skip rebuilding the
+        version key)."""
+        local_key = (group_id, eid, clamp)
         if local_key in self._local:
             return self._local[local_key]
-        views = self._group_views(group_id)
-        key = ("self", group_id, clamp,
+        views = self._cohort_views(group_id, eid)
+        key = ("self", group_id, views[0].kind, clamp,
                tuple((v.name, v.version) for v in views))
         if key not in self._cache:
-            est = sjpc.estimate_batch(
-                views[0].cfg,
-                _stack_states([v.state.counters for v in views]),
-                np.array([v.n for v in views], np.float32),
-                clamp=clamp, use_pallas=self._use_pallas,
-                interpret=self._interpret)
+            est = views[0].estimator.estimate_batch(
+                stack_states([v.state for v in views]), clamp=clamp,
+                use_pallas=self._use_pallas, interpret=self._interpret)
             self._cache[key] = ({v.name: i for i, v in enumerate(views)}, est)
         self._local[local_key] = self._cache[key]
         return self._local[local_key]
@@ -155,18 +133,14 @@ class Snapshot:
         filling the per-pair cache entries ``prefetch``/``join`` read."""
         views_a = [self._view(a) for a, _ in pairs]
         views_b = [self._view(b) for _, b in pairs]
-        est = sjpc.estimate_join_batch(
-            views_a[0].cfg,
-            _stack_states([v.state.counters for v in views_a]),
-            _stack_states([v.state.counters for v in views_b]),
-            np.array([v.n for v in views_a], np.float32),
-            np.array([v.n for v in views_b], np.float32),
+        est = views_a[0].estimator.estimate_join_batch(
+            stack_states([v.state for v in views_a]),
+            stack_states([v.state for v in views_b]),
             clamp=clamp, use_pallas=self._use_pallas,
             interpret=self._interpret)
         for i, (va, vb) in enumerate(zip(views_a, views_b)):
             k = ("join", va.name, va.version, vb.name, vb.version, clamp)
-            self._cache[k] = sjpc.SJPCBatchEstimate(
-                *(a[i:i + 1] for a in est))
+            self._cache[k] = type(est)(*(a[i:i + 1] for a in est))
 
     def prefetch(self, queries, *, clamp: bool = True) -> None:
         """Warm the cache for a batch of :class:`ContinuousQuery` -- one
@@ -184,16 +158,19 @@ class Snapshot:
                 if k not in self._cache:
                     join_pairs.setdefault(va.group_id, []).append((a, b))
             else:
-                self._self_batch(self._view(q.streams[0]).group_id, clamp)
+                v = self._view(q.streams[0])
+                self._self_batch(v.group_id, id(v.estimator), clamp)
         for pairs in join_pairs.values():
             self._join_batch(sorted(set(pairs)), clamp)
 
     # -- per-stream reference oracle -----------------------------------
-    def _level_f2(self, name: str) -> np.ndarray:
+    def _ref_table(self, name: str, clamp: bool):
+        """The estimator's per-stream host oracle (SJPC: int64-exact F2 +
+        float64 inversion -- the PR 1 path), memoized by window version."""
         v = self._view(name)
-        key = ("f2", name, v.version)
+        key = ("ref", name, v.version, clamp)
         if key not in self._cache:
-            self._cache[key] = sjpc.level_f2(v.state)
+            self._cache[key] = v.estimator.estimate_ref(v.state, clamp=clamp)
         return self._cache[key]
 
     # ------------------------------------------------------------------
@@ -207,18 +184,14 @@ class Snapshot:
                              f"[{v.cfg.s}, {v.cfg.d}] of {name!r}")
         li = s - v.cfg.s
         if self._use_fused:
-            index, est = self._self_batch(v.group_id, clamp)
+            index, est = self._self_batch(v.group_id, id(v.estimator), clamp)
             i = index[name]
-            g = float(est.g[i, li])
-            on, off = float(est.stderr[i, li]), float(est.stderr_offline[i, li])
-            xs = est.x[i, li:]
         else:
-            y = self._level_f2(name)
-            x = sjpc.f2_to_pair_count(v.cfg.d, v.cfg.s, v.n, v.cfg.ratio, y,
-                                      clamp=clamp)
-            xs = x[li:]
-            g = float(xs.sum()) + v.n
-            on, off = _stderr(v.cfg, s, v.n, g)
+            est = self._ref_table(name, clamp)
+            i = 0
+        g = float(est.g[i, li])
+        on, off = float(est.stderr[i, li]), float(est.stderr_offline[i, li])
+        xs = est.x[i, li:]
         return QueryResult("self_join", (name,), s, g, on, off, xs,
                            (v.n,), (v.live_epochs,))
 
@@ -237,16 +210,15 @@ class Snapshot:
             if k not in self._cache:
                 self._join_batch([(a, b)], clamp)
             est = self._cache[k]
-            j = float(est.g[0, li])
-            on, off = float(est.stderr[0, li]), float(est.stderr_offline[0, li])
-            xs = est.x[0, li:]
         else:
-            y = sjpc.join_level_inner(va.state, vb.state)
-            x = sjpc.inner_to_join_count(cfg.d, cfg.s, cfg.ratio, y,
-                                         clamp=clamp)
-            xs = x[li:]
-            j = float(xs.sum())
-            on, off = _stderr(cfg, s, max(va.n, vb.n), max(j, 1.0))
+            k = ("join_ref", a, va.version, b, vb.version, clamp)
+            if k not in self._cache:
+                self._cache[k] = va.estimator.estimate_join_ref(
+                    va.state, vb.state, clamp=clamp)
+            est = self._cache[k]
+        j = float(est.g[0, li])
+        on, off = float(est.stderr[0, li]), float(est.stderr_offline[0, li])
+        xs = est.x[0, li:]
         return QueryResult("join", (a, b), s, j, on, off, xs,
                            (va.n, vb.n), (va.live_epochs, vb.live_epochs))
 
@@ -299,7 +271,8 @@ class QueryEngine:
             st = e.window.window_state()
             views[e.name] = _StreamView(
                 name=e.name, cfg=self._registry.group(e.group_id).cfg,
-                state=st, n=e.window.n_live(),
+                state=st, estimator=e.estimator, kind=e.estimator_kind,
+                n=e.window.n_live(),
                 live_epochs=e.window.live_epochs,
                 window_epochs=e.window.window_epochs,
                 group_id=e.group_id, version=e.window.version)

@@ -1,13 +1,20 @@
 """Sketch registry: many named streams (tenants), grouped by shared hashes.
 
 A **hash group** owns one ``SJPCConfig`` and one draw of ``SJPCParams``
-(bucket/sign hash coefficients + fingerprint bases).  Every stream
+(bucket/sign hash coefficients + fingerprint bases).  Every SJPC stream
 registered into the group sketches with those exact parameters, which is
 the paper's §6 precondition: the similarity-*join* estimator is the sketch
 inner product, and inner products are only meaningful between sketches
 built with identical hash functions.  Streams in different groups can use
 different configs (dimensionality, threshold, width, ...) but are not
 pairwise joinable -- the registry enforces this at query time.
+
+Per-stream **estimator choice** (DESIGN.md §13): each stream picks an
+estimator kind from :mod:`repro.estimators` ("sjpc" by default); the
+group's ``SJPCConfig`` seeds every kind's derived configuration, so a
+reservoir or LSH-SS stream created next to an SJPC stream is equal-space
+with it by construction.  One estimator instance per (group, kind) is
+cached on the group, so cohort streams share jit caches and hash params.
 
 Each stream carries its own :class:`~repro.service.window.WindowedSketch`,
 so tenants in one group may still have different window lengths.
@@ -16,8 +23,10 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import estimators as est_mod
 from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCParams
+from repro.estimators import Estimator
 
 from .window import WindowedSketch
 
@@ -27,6 +36,28 @@ class HashGroup:
     group_id: str
     cfg: SJPCConfig
     params: SJPCParams
+    # per-kind construction overrides (e.g. the service's fused/pallas
+    # flags for "sjpc") and the per-kind instance cache
+    estimator_opts: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _estimators: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def estimator(self, kind: str = "sjpc",
+                  estimator_cfg=None) -> Estimator:
+        """The group's shared estimator instance for ``kind`` (constructed
+        on first use; an explicit ``estimator_cfg`` bypasses the cache).
+        ``estimator_opts[kind]`` (the service's dispatch flags) apply
+        either way."""
+        if estimator_cfg is not None:
+            return est_mod.make(kind, self.cfg, params=self.params,
+                                estimator_cfg=estimator_cfg,
+                                opts=self.estimator_opts.get(kind))
+        if kind not in self._estimators:
+            self._estimators[kind] = est_mod.make(
+                kind, self.cfg, params=self.params,
+                opts=self.estimator_opts.get(kind))
+        return self._estimators[kind]
 
 
 @dataclasses.dataclass
@@ -35,8 +66,13 @@ class StreamEntry:
     group_id: str
     uid: int                        # dense per-registry id (keys, stacking order)
     window: WindowedSketch
+    estimator_kind: str = "sjpc"
     flushes: int = 0                # ingest flushes consumed (PRNG folding)
     records: int = 0                # total records ever ingested
+
+    @property
+    def estimator(self) -> Estimator:
+        return self.window.estimator
 
 
 class StreamRegistry:
@@ -46,23 +82,28 @@ class StreamRegistry:
         self._next_uid = 0
 
     # ------------------------------------------------------------------
-    def create_group(self, group_id: str, cfg: SJPCConfig) -> HashGroup:
+    def create_group(self, group_id: str, cfg: SJPCConfig, *,
+                     estimator_opts: dict | None = None) -> HashGroup:
         if group_id in self._groups:
             raise ValueError(f"group {group_id!r} already exists")
         params, _ = sjpc.init(cfg)
-        group = HashGroup(group_id=group_id, cfg=cfg, params=params)
+        group = HashGroup(group_id=group_id, cfg=cfg, params=params,
+                          estimator_opts=dict(estimator_opts or {}))
         self._groups[group_id] = group
         return group
 
     def register(self, name: str, group_id: str,
-                 window_epochs: int | None = None) -> StreamEntry:
+                 window_epochs: int | None = None, *,
+                 estimator: str = "sjpc",
+                 estimator_cfg=None) -> StreamEntry:
         if name in self._streams:
             raise ValueError(f"stream {name!r} already registered")
         group = self.group(group_id)
-        _, state = sjpc.init(group.cfg)     # zero counters, fresh step
+        est = group.estimator(estimator, estimator_cfg)
         entry = StreamEntry(
             name=name, group_id=group_id, uid=self._next_uid,
-            window=WindowedSketch(group.cfg, state, window_epochs))
+            window=WindowedSketch(est, est.init(sid=0), window_epochs),
+            estimator_kind=estimator)
         self._next_uid += 1
         self._streams[name] = entry
         return entry
@@ -91,13 +132,23 @@ class StreamRegistry:
         return list(self._groups.values())
 
     def joinable(self, a: str, b: str) -> bool:
-        """Two streams support the §6 join estimator iff they share hashes."""
-        return self.stream(a).group_id == self.stream(b).group_id
+        """Two streams support the §6 join estimator iff they share hashes
+        AND both run an estimator kind that defines joins (SJPC)."""
+        ea, eb = self.stream(a), self.stream(b)
+        return (ea.group_id == eb.group_id
+                and ea.estimator_kind == eb.estimator_kind
+                and ea.estimator.supports_join)
 
     def require_joinable(self, a: str, b: str) -> HashGroup:
+        ea, eb = self.stream(a), self.stream(b)
+        if ea.group_id != eb.group_id:
+            raise ValueError(
+                f"streams {a!r} ({ea.group_id}) and {b!r} "
+                f"({eb.group_id}) are in different hash groups; "
+                "the join estimator needs identical hash params (paper §6)")
         if not self.joinable(a, b):
             raise ValueError(
-                f"streams {a!r} ({self.stream(a).group_id}) and {b!r} "
-                f"({self.stream(b).group_id}) are in different hash groups; "
-                "the join estimator needs identical hash params (paper §6)")
+                f"streams {a!r} ({ea.estimator_kind}) and {b!r} "
+                f"({eb.estimator_kind}) must both run a join-capable "
+                "estimator (sjpc) to answer §6 join queries")
         return self.group_of(a)

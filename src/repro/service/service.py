@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCState
 
 from .ingest import IngestPipeline
@@ -49,6 +48,9 @@ class ServiceConfig:
     shards: int = 1                  # data-parallel ingest shards per round
     use_fused_query: bool = True     # batched query engine; False = per-stream
                                      # numpy oracle (DESIGN.md §12)
+    estimator: str = "sjpc"          # default estimator kind for new streams
+                                     # (any repro.estimators kind; per-stream
+                                     # override at create_stream)
 
 
 class EstimationService:
@@ -66,7 +68,16 @@ class EstimationService:
 
     # -- provisioning ---------------------------------------------------
     def create_group(self, group_id: str, cfg: SJPCConfig) -> HashGroup:
-        group = self.registry.create_group(group_id, cfg)
+        group = self.registry.create_group(
+            group_id, cfg,
+            estimator_opts={
+                "sjpc": {"use_fused": self.cfg.use_fused,
+                         "use_pallas": self.cfg.use_pallas,
+                         "interpret": self.cfg.interpret,
+                         "shards": self.cfg.shards},
+                "reservoir": {"use_pallas": self.cfg.use_pallas,
+                              "interpret": self.cfg.interpret},
+            })
         self._pipelines[group_id] = IngestPipeline(
             group, batch_rows=self.cfg.batch_rows,
             use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
@@ -74,10 +85,19 @@ class EstimationService:
         return group
 
     def create_stream(self, name: str, group_id: str,
-                      window_epochs=_DEFAULT_WINDOW) -> StreamEntry:
+                      window_epochs=_DEFAULT_WINDOW, *,
+                      estimator: str | None = None,
+                      estimator_cfg=None) -> StreamEntry:
+        """Register a stream.  ``estimator`` picks the protocol kind
+        ("sjpc" | "reservoir" | "lsh_ss", default from ServiceConfig);
+        competitors derive an equal-space config from the group's
+        SJPCConfig unless ``estimator_cfg`` overrides it."""
         if window_epochs is _DEFAULT_WINDOW:
             window_epochs = self.cfg.window_epochs
-        return self.registry.register(name, group_id, window_epochs)
+        return self.registry.register(
+            name, group_id, window_epochs,
+            estimator=estimator or self.cfg.estimator,
+            estimator_cfg=estimator_cfg)
 
     # -- ingest ---------------------------------------------------------
     def ingest(self, name: str, records) -> int:
@@ -94,9 +114,17 @@ class EstimationService:
     def ingest_state_delta(self, name: str, delta: SJPCState) -> None:
         """Absorb an externally-sketched delta (e.g. the training monitor's
         counters since its last publish) into ``name``'s open epoch.  The
-        delta must have been sketched with this stream's group params."""
+        delta must have been sketched with this stream's group params (and
+        the stream must run a linear estimator kind -- sample estimators
+        cannot absorb foreign states)."""
         entry = self.registry.stream(name)
-        entry.window.absorb_delta(sjpc.merge(entry.window.total, delta))
+        est = entry.estimator
+        if not est.linear:
+            raise ValueError(
+                f"stream {name!r} runs non-linear estimator "
+                f"{entry.estimator_kind!r}; external state deltas need a "
+                "linear (mergeable-by-arithmetic) estimator")
+        entry.window.absorb_delta(est.merge(entry.window.ingest_base(), delta))
 
     def _flush_group(self, group_id: str) -> None:
         t0 = time.perf_counter()
@@ -162,6 +190,7 @@ class EstimationService:
             groups[g.group_id] = {
                 "cfg": dataclasses.asdict(g.cfg),
                 "streams": {e.name: {"records": e.records,
+                                     "estimator": e.estimator_kind,
                                      "window_epochs": e.window.window_epochs,
                                      "live_epochs": e.window.live_epochs,
                                      "memory_bytes": e.window.memory_bytes()}

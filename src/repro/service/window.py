@@ -1,13 +1,14 @@
-"""Sliding-window sketch state: a ring buffer of per-epoch deltas.
+"""Sliding-window estimator state: per-epoch ring with expiry.
 
-The SJPC sketch is linear, so time-windowed semantics cost one subtraction:
-keep the cumulative counters of the live window (``total``) plus the
-per-epoch *deltas* in a ring of ``window_epochs`` slots; when an epoch
-rotates past the window edge its delta is subtracted from ``total`` and the
-slot is recycled.  Space overhead is O(window/epoch) sketch copies; queries
-read ``total`` directly -- no per-query summation over epochs.
+Generalized over the :class:`repro.estimators.Estimator` protocol.  Two
+window strategies, chosen by the estimator's ``linear`` capability:
 
-Invariants (asserted in tests/test_service.py):
+**Linear estimators** (SJPC): expiry-by-subtraction, exactly the PR 1
+design.  Keep the cumulative state of the live window (``total``) plus
+per-epoch *delta* states in a ring of ``window_epochs`` slots (stacked
+pytree leaves); when an epoch rotates past the window edge its delta is
+subtracted from ``total`` and the slot is recycled.  Queries read
+``total`` directly.  Invariants (asserted in tests/test_service.py):
 
   W1  total == sum of the live ring slots, bit-exactly, at all times.
   W2  after any number of rotations, total == a fresh sketch built from
@@ -15,81 +16,143 @@ Invariants (asserted in tests/test_service.py):
       subtraction is exact, not approximate.
   W3  total.n >= 0 and (clamp=True) estimates stay non-negative.
 
-The open (current) epoch accumulates in slot ``pos``; ``advance_epoch``
-closes it.  ``window_epochs=None`` means an unbounded (whole-stream) window
--- no ring is kept and nothing ever expires, which degenerates to the
-original whole-stream monitor semantics.
+**Sample estimators** (reservoir, lsh_ss): a uniform sample cannot be
+"un-sampled" by arithmetic, so each epoch is sketched into its own ring
+slot (states init'd with ``sid = epoch`` for provenance) and ``total`` is
+the estimator's merge-fold over the live slots, recomputed when an epoch
+expires.  Ingest targets the *open slot* (see :meth:`ingest_base`), and a
+commit that changes it refreshes the fold -- O(window) merges per flush,
+far off the per-record hot path.  Expired epochs drop whole slots, so
+expiry is exact in n and provenance; the honest streaming cost is that a
+merged sample cannot refill slots from data it never kept.
+
+``window_epochs=None`` means an unbounded (whole-stream) window for
+either strategy -- no ring, nothing expires, ingest goes straight into
+``total``.
+
+The open (current) epoch accumulates at ring position ``pos``;
+``advance_epoch`` closes it.  ``version`` bumps whenever ``total``
+changes (ingest commits; rotations that expire data) and is the query
+engine's cache key -- a rotation that leaves ``total`` untouched must not
+invalidate standing-query caches.
 """
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import sjpc
-from repro.core.sjpc import SJPCConfig, SJPCState
+from repro.estimators import Estimator, index_state
 
 
 class WindowedSketch:
     """Mutable host-side wrapper around the (device-resident) window state.
 
-    All arrays stay jnp; mutation here is per-epoch bookkeeping, far off the
-    ingest hot path (which batches through service.ingest -> one jit'd
-    multi-stream dispatch and then calls :meth:`absorb_delta` once).
-    """
+    All arrays stay jnp; mutation here is per-epoch bookkeeping, far off
+    the ingest hot path (which batches through service.ingest -> one jit'd
+    multi-stream dispatch per estimator cohort and then calls
+    :meth:`absorb_delta` once)."""
 
-    def __init__(self, cfg: SJPCConfig, init_state: SJPCState,
+    def __init__(self, estimator: Estimator, init_state,
                  window_epochs: int | None = None):
         assert window_epochs is None or window_epochs >= 1
-        self.cfg = cfg
+        self.estimator = estimator
+        self.cfg = getattr(estimator, "cfg", None)
         self.window_epochs = window_epochs
         self.total = init_state
         self.epoch = 0                      # index of the open epoch
         self.version = 0                    # bumped whenever ``total`` changes
-        if window_epochs is not None:
-            shape = (window_epochs,) + tuple(init_state.counters.shape)
-            self._ring_counters = jnp.zeros(shape, jnp.int32)
-            self._ring_n = jnp.zeros((window_epochs,), jnp.float32)
-            self._pos = 0                   # slot of the open epoch
-            self._live = 1                  # live epochs incl. the open one
+        if window_epochs is None:
+            return
+        if estimator.linear:
+            # ring of per-epoch DELTA states, stacked pytree leaves
+            self._ring = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((window_epochs,) + tuple(jnp.shape(x)),
+                                    x.dtype), init_state)
+        else:
+            # ring of per-epoch STATES; slot sid = epoch for provenance
+            self._slots: list = [None] * window_epochs
+            self._slots[0] = init_state
+        self._pos = 0                       # slot of the open epoch
+        self._live = 1                      # live epochs incl. the open one
 
     # ------------------------------------------------------------------
-    def absorb_delta(self, new_state: SJPCState) -> None:
-        """Commit the post-ingest cumulative state; the delta vs the previous
-        total is credited to the open epoch's ring slot."""
-        if new_state is self.total:
+    def ingest_base(self):
+        """The state the ingest pipeline should update: the cumulative
+        window for linear estimators (and unbounded windows), the open
+        epoch's own state for windowed sample estimators."""
+        if self.window_epochs is not None and not self.estimator.linear:
+            return self._slots[self._pos]
+        return self.total
+
+    def absorb_delta(self, new_state) -> None:
+        """Commit the post-ingest state for :meth:`ingest_base`.  Linear:
+        the delta vs the previous total is credited to the open epoch's
+        ring slot.  Sample: the open slot is replaced and the live-window
+        fold refreshed."""
+        if new_state is self.ingest_base():
             return          # no-op flush: nothing changed, keep the version
         self.version += 1
-        if self.window_epochs is not None:
-            d_counters = new_state.counters - self.total.counters
-            d_n = new_state.n - self.total.n
-            self._ring_counters = self._ring_counters.at[self._pos].add(d_counters)
-            self._ring_n = self._ring_n.at[self._pos].add(d_n)
-        self.total = new_state
+        if self.window_epochs is None or self.estimator.linear:
+            if self.window_epochs is not None:
+                delta = self.estimator.subtract(new_state, self.total)
+                self._ring = jax.tree_util.tree_map(
+                    lambda ring, d: ring.at[self._pos].add(d),
+                    self._ring, delta)
+            self.total = new_state
+        else:
+            self._slots[self._pos] = new_state
+            self._refold()
+
+    def _refold(self) -> None:
+        """total = merge-fold of the live ring slots (sample windows)."""
+        live = [s for s in self._slots if s is not None]
+        total = live[0]
+        for s in live[1:]:
+            total = self.estimator.merge(total, s)
+        self.total = total
 
     def advance_epoch(self) -> None:
-        """Close the open epoch.  If the ring is full, the oldest epoch's
-        delta is subtracted from ``total`` (expiry-by-subtraction)."""
+        """Close the open epoch.  If the ring is full, the oldest epoch
+        expires: subtracted from ``total`` (linear) or dropped from the
+        fold (sample)."""
         self.epoch += 1
         if self.window_epochs is None:
             return
         self._pos = (self._pos + 1) % self.window_epochs
-        if self._live < self.window_epochs:
+        expiring = self._live >= self.window_epochs
+        if not expiring:
             self._live += 1
+        if self.estimator.linear:
+            if expiring:
+                # the slot we are about to reuse holds the expiring epoch;
+                # version bumps only here -- a rotation that leaves
+                # ``total`` untouched must not invalidate version-keyed
+                # query caches
+                expired = self._with_total_step(
+                    index_state(self._ring, self._pos))
+                self.total = self.estimator.subtract(self.total, expired)
+                self.version += 1
+            self._ring = jax.tree_util.tree_map(
+                lambda ring: ring.at[self._pos].set(
+                    jnp.zeros_like(ring[self._pos])), self._ring)
         else:
-            # the slot we are about to reuse holds the expiring epoch;
-            # version bumps only here -- a rotation that leaves ``total``
-            # untouched must not invalidate version-keyed query caches
-            expired = SJPCState(counters=self._ring_counters[self._pos],
-                                n=self._ring_n[self._pos],
-                                step=self.total.step)
-            self.total = sjpc.subtract(self.total, expired)
-            self.version += 1
-        self._ring_counters = self._ring_counters.at[self._pos].set(0)
-        self._ring_n = self._ring_n.at[self._pos].set(0.0)
+            self._slots[self._pos] = self.estimator.init(sid=self.epoch)
+            if expiring:
+                self._refold()
+                self.version += 1
+
+    def _with_total_step(self, state):
+        """Epoch deltas carry no meaningful PRNG position: expiry removes
+        old *data*, not PRNG history (see sjpc.subtract), so reconstructed
+        ring states borrow the cumulative state's step."""
+        if "step" not in getattr(state, "_fields", ()):
+            return state
+        return state._replace(step=self.total.step)
 
     # ------------------------------------------------------------------
-    def window_state(self) -> SJPCState:
-        """The SJPC state of exactly the live window (W1: == ring sum)."""
+    def window_state(self):
+        """The state of exactly the live window (linear W1: == ring sum)."""
         return self.total
 
     def n_live(self) -> float:
@@ -104,15 +167,16 @@ class WindowedSketch:
     def live_epochs(self) -> int:
         return self._live if self.window_epochs is not None else self.epoch + 1
 
-    def ring_sum(self) -> SJPCState:
-        """Recompute total from the ring (diagnostics / invariant W1)."""
+    def ring_sum(self):
+        """Recompute total from the ring (diagnostics / invariant W1;
+        linear estimators only -- sample windows fold via merge)."""
         assert self.window_epochs is not None, "unbounded window has no ring"
-        return SJPCState(counters=self._ring_counters.sum(axis=0),
-                         n=self._ring_n.sum(),
-                         step=self.total.step)
+        assert self.estimator.linear, "sample windows have no delta ring"
+        return self._with_total_step(
+            jax.tree_util.tree_map(lambda x: x.sum(axis=0), self._ring))
 
     def memory_bytes(self) -> int:
-        base = self.cfg.counters_bytes
+        base = self.estimator.memory_bytes()
         if self.window_epochs is None:
             return base
         return base * (1 + self.window_epochs)

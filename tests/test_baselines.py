@@ -43,6 +43,40 @@ class TestRandomSampling:
         assert misses >= 18
 
 
+class TestDegenerateStreams:
+    """n in {0, 1}: every offline estimator must degrade gracefully --
+    empty streams used to crash random sampling (rng.choice(0, ...))."""
+
+    def test_random_sampling_empty_stream(self):
+        rng = np.random.default_rng(0)
+        empty = np.zeros((0, 5), np.uint32)
+        x = baselines.random_sampling_pair_counts(empty, 100, rng)
+        np.testing.assert_array_equal(x, np.zeros(6))
+        assert baselines.random_sampling_g(empty, 3, 100, rng) == 0.0
+
+    def test_random_sampling_single_record(self):
+        rng = np.random.default_rng(1)
+        one = np.ones((1, 5), np.uint32)
+        np.testing.assert_array_equal(
+            baselines.random_sampling_pair_counts(one, 100, rng), np.zeros(6))
+        assert baselines.random_sampling_g(one, 3, 100, rng) == 1.0
+
+    def test_lsh_ss_empty_and_single(self):
+        rng = np.random.default_rng(2)
+        assert baselines.lsh_ss_g(np.zeros((0, 5), np.uint32), 3, rng) == 0.0
+        assert baselines.lsh_ss_g(np.ones((1, 5), np.uint32), 3, rng) == 1.0
+
+    def test_zero_sample_budget_returns_zero_histogram(self):
+        """A sample budget of 0 or 1 records must yield the degenerate
+        estimate (g = n), not crash and not silently inflate the sample."""
+        rng = np.random.default_rng(3)
+        vals = rng.integers(0, 9, size=(50, 5)).astype(np.uint32)
+        for budget in (0, 1):
+            x = baselines.random_sampling_pair_counts(vals, budget, rng)
+            np.testing.assert_array_equal(x, np.zeros(6))
+            assert baselines.random_sampling_g(vals, 3, budget, rng) == 50.0
+
+
 class TestLSHSS:
     def test_reasonable_estimate_on_dups(self):
         rng = np.random.default_rng(3)
@@ -59,8 +93,54 @@ class TestLSHSS:
         g = baselines.lsh_ss_g(vals, 4, rng)
         assert abs(g - 500) / 500 < 0.5
 
+    def test_num_hash_cols_validated(self):
+        rng = np.random.default_rng(5)
+        vals = rng.integers(0, 9, size=(40, 5)).astype(np.uint32)
+        for bad in (0, -1, 6):
+            with pytest.raises(ValueError, match="num_hash_cols"):
+                baselines.lsh_ss_g(vals, 3, rng, num_hash_cols=bad)
+
+    @pytest.mark.parametrize("num_hash_cols", [2, 5])
+    def test_column_subset_used(self, num_hash_cols):
+        """Larger column subsets refine the buckets; the estimate stays in
+        a sane band on duplicate-structured data."""
+        rng = np.random.default_rng(6)
+        vals = _dups_dataset(rng, n=300)
+        true_g = exact.exact_g(vals, 4)
+        ests = [baselines.lsh_ss_g(vals, 4, np.random.default_rng(200 + s),
+                                   num_hash_cols=num_hash_cols)
+                for s in range(10)]
+        assert all(np.isfinite(e) and e >= 300 for e in ests)
+        assert abs(np.median(ests) - true_g) / true_g < 1.0
+
+    def test_d_column_edge_case_buckets_are_exact_records(self):
+        """Regression pin for c = d: the bucket key is the whole record, so
+        the same-bucket stratum is exactly the duplicate pairs, every one
+        d-similar (p1 = 1), and the s = d estimate is deterministic: the
+        true ordered duplicate-pair count plus n (the cross stratum holds
+        no d-similar pairs by construction)."""
+        rng = np.random.default_rng(7)
+        n, d = 200, 5
+        vals = rng.integers(0, 2**30, size=(n, d)).astype(np.uint32)
+        vals[n - 10:] = vals[:10]                 # 10 exact duplicate pairs
+        true_g = exact.exact_g(vals, d)
+        assert true_g == n + 20                   # ordered pairs
+        for seed in range(3):
+            g = baselines.lsh_ss_g(vals, d, np.random.default_rng(seed),
+                                   num_hash_cols=d)
+            assert g == true_g, (seed, g, true_g)
+
 
 class TestSpaceAccounting:
     def test_sample_size_for_bytes(self):
         # Fig. 8 setting: 48,000 bytes, 48-byte records -> 1000 records
         assert baselines.sample_size_for_bytes(48_000, 48) == 1000
+
+    def test_no_silent_floor(self):
+        """A budget holding < 2 records reports the truth (0 or 1), and
+        the downstream estimator degrades to the zero histogram instead of
+        silently over-provisioning the sample."""
+        assert baselines.sample_size_for_bytes(0, 48) == 0
+        assert baselines.sample_size_for_bytes(47, 48) == 0
+        assert baselines.sample_size_for_bytes(95, 48) == 1
+        assert baselines.sample_size_for_bytes(96, 48) == 2

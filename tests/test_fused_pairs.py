@@ -1,0 +1,101 @@
+"""Conformance for the fused all-pairs similarity-histogram kernel
+(kernels/fused_pairs.py) -- the reservoir estimator's query hot path.
+
+Three-way agreement, required bit-exact (all paths count in exact integer
+arithmetic):
+
+  numpy oracle (core.exact.brute_force_pair_counts per valid sample)
+    == jnp fallback (kernels.ref.fused_pairs_ref)
+    == Pallas kernel (interpret mode on this CPU container)
+
+across depths d, sample sizes R (tile remainders included), batch sizes
+N, tile shapes, empty inputs, all-invalid masks, and duplicate-heavy data
+(the diagonal/self-pair masking case).
+"""
+import numpy as np
+import pytest
+
+from repro.core import exact
+from repro.kernels import ref
+from repro.kernels.fused_pairs import fused_pairs_pallas
+from repro.kernels.ops import fused_pairs
+
+
+def _oracle(items, valid):
+    out = []
+    for i in range(items.shape[0]):
+        sub = items[i][valid[i] != 0]
+        out.append(exact.brute_force_pair_counts(sub) if sub.shape[0]
+                   else np.zeros(items.shape[2] + 1))
+    return np.stack(out).astype(np.int64)
+
+
+def _case(rng, N, R, d, vocab=5, p_valid=0.8):
+    items = rng.integers(0, vocab, size=(N, R, d)).astype(np.uint32)
+    valid = (rng.random((N, R)) < p_valid).astype(np.int32)
+    return items, valid
+
+
+class TestConformance:
+    @pytest.mark.parametrize("N,R,d", [
+        (1, 1, 3),      # single record: no pairs
+        (1, 7, 3),      # smaller than any tile
+        (2, 64, 5),
+        (1, 130, 6),    # tile remainder (128 + 2)
+        (3, 33, 4),
+        (1, 256, 2),    # exact multiple of the tile
+    ])
+    def test_ref_and_pallas_match_oracle(self, N, R, d):
+        rng = np.random.default_rng(N * 1000 + R * 10 + d)
+        items, valid = _case(rng, N, R, d)
+        want = _oracle(items, valid)
+        got_ref = np.asarray(fused_pairs(items, valid, use_pallas=False))
+        got_pal = np.asarray(fused_pairs(items, valid, use_pallas=True,
+                                         interpret=True))
+        np.testing.assert_array_equal(got_ref, want)
+        np.testing.assert_array_equal(got_pal, want)
+
+    @pytest.mark.parametrize("block_r", [8, 32, 128])
+    def test_tile_shape_irrelevant(self, block_r):
+        rng = np.random.default_rng(3)
+        items, valid = _case(rng, 2, 100, 5)
+        want = np.asarray(ref.fused_pairs_ref(items, valid))
+        got = np.asarray(fused_pairs_pallas(items, valid, block_r=block_r,
+                                            interpret=True))
+        np.testing.assert_array_equal(got, want)
+
+    def test_duplicate_heavy_diagonal_masked(self):
+        """All-identical records: every ordered pair is d-similar and the
+        R self-pairs are excluded -- the diagonal masking contract."""
+        R, d = 50, 4
+        items = np.ones((1, R, d), np.uint32) * 7
+        valid = np.ones((1, R), np.int32)
+        for use_pallas in (False, True):
+            got = np.asarray(fused_pairs(items, valid, use_pallas=use_pallas,
+                                         interpret=True))
+            want = np.zeros(d + 1, np.int64)
+            want[d] = R * (R - 1)
+            np.testing.assert_array_equal(got[0], want)
+
+    def test_empty_and_all_invalid(self):
+        zero4 = np.zeros(5, np.int64)
+        # R = 0: no slots at all
+        got = np.asarray(fused_pairs(np.zeros((2, 0, 4), np.uint32),
+                                     np.zeros((2, 0), np.int32)))
+        assert got.shape == (2, 5) and not got.any()
+        # all slots invalid
+        rng = np.random.default_rng(5)
+        items, _ = _case(rng, 2, 40, 4)
+        none = np.zeros((2, 40), np.int32)
+        for use_pallas in (False, True):
+            got = np.asarray(fused_pairs(items, none, use_pallas=use_pallas,
+                                         interpret=True))
+            np.testing.assert_array_equal(got, np.stack([zero4, zero4]))
+
+    def test_single_valid_record(self):
+        items = np.arange(12, dtype=np.uint32).reshape(1, 3, 4)
+        valid = np.array([[0, 1, 0]], np.int32)
+        for use_pallas in (False, True):
+            got = np.asarray(fused_pairs(items, valid, use_pallas=use_pallas,
+                                         interpret=True))
+            assert not got.any()

@@ -26,6 +26,7 @@ import pytest
 
 from repro.core import baselines, exact, sjpc
 from repro.core.sjpc import SJPCConfig
+from repro.data import synthetic
 
 D = 6
 N = 32768
@@ -35,27 +36,11 @@ WIDTH, DEPTH, RATIO = 2048, 3, 1.0
 BASE_SEED = 900
 
 
-def _clustered_records(n, d, rng, clusters):
-    """Uniform noise + planted near-duplicate clusters: (k, size, count)
-    plants `count` clusters of `size` records agreeing on `k` columns --
-    the quadratic duplicate-group structure of the paper's DBLP data."""
-    recs = rng.integers(0, 1 << 30, size=(n, d), dtype=np.uint32)
-    pos = n - 1
-    for k, size, count in clusters:
-        for _ in range(count):
-            src = rng.integers(0, n // 4)
-            cols = rng.choice(d, size=k, replace=False)
-            for _ in range(size - 1):
-                recs[pos, cols] = recs[src, cols]
-                pos -= 1
-    return recs
-
-
 @pytest.fixture(scope="module")
 def workload():
     rng = np.random.default_rng(17)
-    vals = _clustered_records(N, D, rng,
-                              [(4, 384, 3), (5, 256, 2), (6, 128, 1)])
+    vals = synthetic.planted_cluster_records(
+        N, D, rng, [(4, 384, 3), (5, 256, 2), (6, 128, 1)])
     x_exact = exact.exact_pair_counts(vals)
     g_true = {s: float(x_exact[s:].sum() + N) for s in MID_BAND}
     assert all(g > 3 * N for g in g_true.values())      # the g_s >> n regime
@@ -129,6 +114,48 @@ def test_estimates_finite_and_nonnegative_small(workload):
         g_lsh = baselines.lsh_ss_g(sub, s, rng, m_h=128, m_l=128)
         assert np.isfinite(g_rs) and g_rs >= sub.shape[0]
         assert np.isfinite(g_lsh) and g_lsh >= sub.shape[0]
+
+
+def test_served_sjpc_beats_served_reservoir_equal_space(workload):
+    """The headline comparison THROUGH THE SERVICE PATH (DESIGN.md §13):
+    SJPC and the streaming reservoir estimator served side-by-side in one
+    hash group at derived equal-space budgets, on the same replayed
+    stream; SJPC's median relative error must beat the served reservoir at
+    every mid-band threshold.  This is the offline Fig. 4/8 contract
+    promoted to a continuously-served workload."""
+    from repro.service import EstimationService, ServiceConfig
+    vals, g_true = workload
+    errs = {"sjpc": {s: [] for s in MID_BAND},
+            "res": {s: [] for s in MID_BAND}}
+    for t in range(5):
+        cfg = SJPCConfig(d=D, s=S_SKETCH, ratio=RATIO, width=WIDTH,
+                         depth=DEPTH, seed=BASE_SEED + 50 + t)
+        svc = EstimationService(ServiceConfig(batch_rows=2048,
+                                              window_epochs=None))
+        svc.create_group("g", cfg)
+        svc.create_stream("sjpc", "g")
+        svc.create_stream("res", "g", estimator="reservoir")
+        res_est = svc.registry.stream("res").estimator
+        # equal space by construction, and genuinely sublinear
+        assert res_est.memory_bytes() <= cfg.counters_bytes
+        assert res_est.cfg.capacity < N // 8
+        for nm in ("sjpc", "res"):
+            svc.ingest(nm, vals)
+        snap = svc.snapshot()
+        for nm in ("sjpc", "res"):
+            for s in MID_BAND:
+                g = snap.self_join(nm, s).estimate
+                assert np.isfinite(g) and g >= 0
+                errs[nm][s].append(abs(g - g_true[s]) / g_true[s])
+    for s in MID_BAND:
+        sj = float(np.median(errs["sjpc"][s]))
+        rs = float(np.median(errs["res"][s]))
+        assert sj < rs, (
+            f"s={s}: served SJPC median rel err {sj:.4f} no longer beats "
+            f"the served equal-space reservoir {rs:.4f} "
+            f"(sjpc={np.round(errs['sjpc'][s], 3)}, "
+            f"res={np.round(errs['res'][s], 3)})")
+        assert sj < 0.15, f"s={s}: served SJPC rel err {sj:.4f} regressed"
 
 
 @pytest.mark.slow
