@@ -174,11 +174,12 @@ def equal_space_table(res):
         out.append(f"workload: {wl.get('records', '?')} records, "
                    f"d={wl.get('d', '?')}, SJPC budget "
                    f"{wl.get('sjpc_bytes', '?')} bytes\n")
-    hdr = "| estimator | memory B | ingest rec/s | query p50 ms |"
-    sep = "|---|---|---|---|"
+    hdr = ("| estimator | memory B | ingest rec/s | query p50 ms | stderr "
+           "| CI95 covers |")
+    sep = "|---|---|---|---|---|---|"
     for s in thresholds:
-        hdr += f" rel err s={s} |"
-        sep += "---|"
+        hdr += f" rel err s={s} | ±σ s={s} |"
+        sep += "---|---|"
     out += [hdr, sep]
     for kind in sorted(k for k in eq if k != "workload"):
         row = eq[kind]
@@ -190,10 +191,17 @@ def equal_space_table(res):
                 f"| {float(rps):.0f} |" if rps is not None
                 else f"| {kind} | {row.get('memory_bytes', '-')} | - |")
         line += f" {float(q50):.1f} |" if q50 is not None else " - |"
+        line += f" {row.get('stderr_kind', '-')} |"
+        cov = row.get("ci95_covers", {})
+        line += (f" {sum(map(bool, cov.values()))}/{len(cov)} |" if cov
+                 else " - |")
         errs = row.get("rel_err", {})
+        sigs = row.get("stderr_rel", {})
         for s in thresholds:
             e = errs.get(str(s))
             line += f" {float(e):.3f} |" if e is not None else " - |"
+            sg = sigs.get(str(s))
+            line += f" {float(sg):.3f} |" if sg is not None else " - |"
         out.append(line)
     return "\n".join(out)
 

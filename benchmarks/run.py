@@ -368,6 +368,14 @@ def bench_equal_space():
             "rel_err": {str(s): abs(r.estimate - g_true[s])
                         / max(g_true[s], 1.0)
                         for s, r in row.items()},
+            # the served error bars (DESIGN.md §14): relative 1-sigma and
+            # whether the 95% interval covers the exact answer
+            "stderr_kind": next(iter(row.values())).stderr_kind,
+            "stderr_rel": {str(s): r.stderr / max(g_true[s], 1.0)
+                           for s, r in row.items()},
+            "ci95_covers": {str(s): bool(abs(r.estimate - g_true[s])
+                                         <= 1.96 * r.stderr)
+                            for s, r in row.items()},
         }
 
     # per-kind ingest throughput (isolated service -> clean cohort timing)

@@ -50,8 +50,10 @@ def main():
         for s in g_true:
             r = row[s]
             err = abs(r.estimate - g_true[s]) / g_true[s]
-            cells.append(f"{r.estimate:>10.0f} ({err:>4.1%})")
-        print(f"{kind:>10} {mem:>8} " + " ".join(cells))
+            cells.append(f"{r.estimate:>8.0f}±{r.stderr:<6.0f}({err:>4.0%})")
+        kinds_bar = next(iter(row.values())).stderr_kind
+        print(f"{kind:>10} {mem:>8} " + " ".join(cells)
+              + f"   [{kinds_bar}]")
     print("\nper-stream estimator metadata:",
           {nm: row["estimator"] for nm, row in
            svc.describe()["groups"]["g"]["streams"].items()})

@@ -49,8 +49,12 @@ class EstimateTable(NamedTuple):
     """Estimates for N same-config streams at EVERY threshold k = s..d.
 
     Shapes mirror :class:`repro.core.sjpc.SJPCBatchEstimate` (column i
-    answers threshold k = s + i); estimators with no analytical error
-    bound report zero stderr columns (documented per estimator).
+    answers threshold k = s + i).  ``stderr_kind`` names the uncertainty
+    method behind the stderr columns -- "analytic" (the paper's Theorem
+    1/2 bounds), "bootstrap" / "bootstrap_stratified" (the resampling
+    bars of :mod:`repro.estimators.uncertainty`), or "none" (disabled /
+    unknown; columns are zero) -- so the service can surface per-kind
+    confidence intervals through one contract (DESIGN.md §14).
     """
     x: np.ndarray              # (N, L) per-level k-similar pair estimates
     g: np.ndarray              # (N, L) g_k per threshold
@@ -58,6 +62,7 @@ class EstimateTable(NamedTuple):
     n: np.ndarray              # (N,) records in each stream's window
     stderr: np.ndarray         # (N, L) absolute 1-sigma bound (0 = unknown)
     stderr_offline: np.ndarray  # (N, L) sampling-only bound (0 = unknown)
+    stderr_kind: str = "none"  # uncertainty method behind the bars
 
 
 class Estimator:
@@ -199,7 +204,10 @@ def merge_tagged_samples(items_a, tags_a, n_a, items_b, tags_b, n_b,
     """Merge two tagged fixed-capacity uniform samples into one of
     ``capacity`` slots: pool both, keep the top-``capacity`` priority keys
     (weighted by represented population, see :func:`priority_merge_keys`).
-    Returns (items, tags) with empty slots tagged -1."""
+    Returns (items, tags) with empty slots tagged -1.  ``capacity`` may
+    exceed the pooled slot count (the window's backing-epoch refill folds
+    into an *expanded* total); the shortfall is padded with empty slots.
+    """
     m_a = jnp.sum((tags_a >= 0).astype(jnp.float32))
     m_b = jnp.sum((tags_b >= 0).astype(jnp.float32))
     w_a = jnp.asarray(n_a, jnp.float32) / jnp.maximum(m_a, 1.0)
@@ -209,10 +217,19 @@ def merge_tagged_samples(items_a, tags_a, n_a, items_b, tags_b, n_b,
     keys = jnp.concatenate([
         priority_merge_keys(items_a, tags_a, w_a, salt),
         priority_merge_keys(items_b, tags_b, w_b, salt)], axis=0)
-    _, top = jax.lax.top_k(keys, capacity)
+    k = min(capacity, items.shape[0])
+    _, top = jax.lax.top_k(keys, k)
     sel_valid = jnp.take(tags, top) >= 0
-    return (jnp.take(items, top, axis=0),
-            jnp.where(sel_valid, jnp.take(tags, top), -1))
+    out_items = jnp.take(items, top, axis=0)
+    out_tags = jnp.where(sel_valid, jnp.take(tags, top), -1)
+    if k < capacity:
+        pad = capacity - k
+        out_items = jnp.concatenate(
+            [out_items, jnp.zeros((pad,) + out_items.shape[1:],
+                                  out_items.dtype)], axis=0)
+        out_tags = jnp.concatenate(
+            [out_tags, jnp.full((pad,), -1, out_tags.dtype)], axis=0)
+    return out_items, out_tags
 
 
 # ---------------------------------------------------------------------------

@@ -13,9 +13,14 @@ served here maintains every ingredient online:
     conservatively toward the same stratum (documented, bounded by the
     load factor).  Linear, so merge/subtract are exact counter arithmetic.
   * a **record reservoir** (Algorithm R, with each record's bucket id):
-    the online pair generator.  Every arriving record is paired with one
-    uniformly drawn stored record; the pair is a same- or cross-stratum
-    candidate by bucket equality.
+    the online pair generator.  Every arriving record g is paired with one
+    uniform *earlier* record: a uniform rank u in [0, g) resolves to the
+    in-batch record when it falls inside the current round, else to a
+    uniform stored reservoir slot (the reservoir is itself a uniform
+    sample of the past).  The pair is a same- or cross-stratum candidate
+    by bucket equality.  Pairing only against the stored reservoir -- the
+    pre-fix behavior -- silently dropped every within-round pair, biasing
+    the stratum fractions low whenever similar records arrive together.
   * two **stratified pair reservoirs**: per stratum, Algorithm R over its
     candidate pairs, storing only the pair's match count (int) -- the
     similar fraction of each stratum at query time is a mask-and-count.
@@ -23,7 +28,10 @@ served here maintains every ingredient online:
 Estimates: g_s = p1 * same_pairs + p2 * cross_pairs + n, exactly the
 offline formula (core/baselines.py:lsh_ss_g) with every term read from
 the online state.  No analytical error bound exists (the paper proves
-none for LSH-SS); stderr columns are zero.
+none for LSH-SS); the served stderr is the *stratified bootstrap* of
+estimators/uncertainty.py (resample each stratum's pair reservoir, scale
+by the near-exact linear stratum totals; stderr_kind
+"bootstrap_stratified").
 
 Sample-state algebra follows estimators.reservoir: provenance-tagged
 slots, deterministic weighted union on merge, tag-drop on subtract; the
@@ -41,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.core.sjpc import SJPCConfig
 
+from . import uncertainty
 from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
                    scan_rounds)
 from .reservoir import reservoir_accept
@@ -92,11 +101,17 @@ class LSHSSEstimator(Estimator):
     linear = False
     supports_join = False
 
-    def __init__(self, cfg: LSHSSConfig):
+    def __init__(self, cfg: LSHSSConfig, *,
+                 bootstrap_replicates: int = uncertainty.DEFAULT_REPLICATES):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed ^ 0x15AC01)
         self.cols = np.sort(rng.choice(cfg.d, size=cfg.num_hash_cols,
                                        replace=False))
+        # stratified bootstrap error bars (0 disables -> stderr_kind "none")
+        if bootstrap_replicates == 1:
+            raise ValueError("bootstrap_replicates must be 0 (disabled) "
+                             "or >= 2 (a std needs two replicates)")
+        self.bootstrap = int(bootstrap_replicates)
         self._rounds_fn = jax.jit(
             functools.partial(scan_rounds, self._ingest_one))
 
@@ -158,16 +173,43 @@ class LSHSSEstimator(Estimator):
         counts = state.counts.at[jnp.where(maskb, bucket, 0)] \
             .add(jnp.where(maskb, 1, 0))
 
-        kp, ks, kc, kr = jax.random.split(key, 4)
-        # pair one candidate per arriving record with a uniform stored one
-        # (drawn from the pre-batch reservoir; the first-ever batch sees an
-        # empty reservoir and generates no pairs -- documented)
-        partner = jax.random.randint(kp, mask.shape, 0, cfg.record_capacity)
-        p_ok = jnp.take(state.rec_tags, partner) >= 0
-        p_sim = jnp.sum(
-            (values == jnp.take(state.rec_items, partner, axis=0))
-            .astype(jnp.int32), axis=1)
-        p_same = jnp.take(state.rec_bucket, partner) == bucket
+        kp, kq, ks, kc, kr = jax.random.split(key, 5)
+        # pair one candidate per arriving record with a uniform EARLIER
+        # record: arrival g draws a uniform rank u in [0, g); ranks inside
+        # the current round resolve to the in-batch record directly, ranks
+        # before it to a uniform reservoir slot (the reservoir is a uniform
+        # sample of the past, so the partner stays ~uniform).  The old
+        # reservoir-only draw skipped every within-round pair, which
+        # silently biased the stratum fractions low on workloads whose
+        # similar records arrive close together (planted clusters, bursts)
+        # -- the dominant term of the equal_space LSH-SS error.
+        B = mask.shape[0]
+        pos = jnp.cumsum(mask) - 1                          # candidate index
+        gidx = state.n + pos                                # global arrival
+        u = jax.random.randint(kp, mask.shape, 0, jnp.maximum(gidx, 1))
+        within = maskb & (u >= state.n)
+        # pre-round ranks: while the reservoir is warming up (n < R) its
+        # slots are filled sequentially, so rank u lives at slot u exactly
+        # -- a fresh uniform slot draw there would drop candidates landing
+        # on still-empty slots, thinning pre-round pairs relative to
+        # within-round ones.  Once full, every uniform slot is valid.
+        slot_draw = jax.random.randint(kq, mask.shape, 0,
+                                       cfg.record_capacity)
+        warmup = state.n < cfg.record_capacity
+        slot = jnp.where(warmup,
+                         jnp.clip(u, 0, cfg.record_capacity - 1), slot_draw)
+        row_of = jnp.zeros((B + 1,), jnp.int32) \
+            .at[jnp.where(maskb, pos, B)].set(jnp.arange(B, dtype=jnp.int32))
+        in_row = jnp.take(row_of, jnp.clip(u - state.n, 0, B))
+        p_items = jnp.where(within[:, None],
+                            jnp.take(values, in_row, axis=0),
+                            jnp.take(state.rec_items, slot, axis=0))
+        p_bucket = jnp.where(within, jnp.take(bucket, in_row),
+                             jnp.take(state.rec_bucket, slot))
+        p_ok = (gidx > 0) & jnp.where(
+            within, True, jnp.take(state.rec_tags, slot) >= 0)
+        p_sim = jnp.sum((values == p_items).astype(jnp.int32), axis=1)
+        p_same = p_bucket == bucket
 
         def pair_reservoir(k, cand, sims, tags, seen, sim_vals):
             win, src, seen_new = reservoir_accept(
@@ -209,8 +251,17 @@ class LSHSSEstimator(Estimator):
                                     n_b, capacity,
                                     _MERGE_SALT ^ self.cfg.seed)
 
-    def merge(self, a: LSHSSState, b: LSHSSState) -> LSHSSState:
+    def refill_capacity(self, backing: int) -> tuple[int, int]:
+        """(record, pair) fold capacities with ``backing`` half-capacity
+        backing epochs (window refill, DESIGN.md §14.2)."""
+        c = self.cfg
+        return (c.record_capacity + backing * (c.record_capacity // 2),
+                c.pair_capacity + backing * (c.pair_capacity // 2))
+
+    def merge(self, a: LSHSSState, b: LSHSSState, *,
+              backing: int = 0) -> LSHSSState:
         cfg = self.cfg
+        rec_cap, pair_cap = self.refill_capacity(backing)
         # record reservoir: carry the bucket id as an extra merged column
         rec_a = jnp.concatenate(
             [a.rec_items, a.rec_bucket.astype(jnp.uint32)[:, None]], axis=1)
@@ -218,16 +269,16 @@ class LSHSSEstimator(Estimator):
             [b.rec_items, b.rec_bucket.astype(jnp.uint32)[:, None]], axis=1)
         rec, rec_tags = self._merge_sample(rec_a, a.rec_tags, a.n,
                                            rec_b, b.rec_tags, b.n,
-                                           cfg.record_capacity)
+                                           rec_cap)
         same, same_tags = self._merge_sample(
             a.same_sim.astype(jnp.uint32)[:, None], a.same_tags, a.same_seen,
             b.same_sim.astype(jnp.uint32)[:, None], b.same_tags, b.same_seen,
-            cfg.pair_capacity)
+            pair_cap)
         cross, cross_tags = self._merge_sample(
             a.cross_sim.astype(jnp.uint32)[:, None], a.cross_tags,
             a.cross_seen,
             b.cross_sim.astype(jnp.uint32)[:, None], b.cross_tags,
-            b.cross_seen, cfg.pair_capacity)
+            b.cross_seen, pair_cap)
         return LSHSSState(
             counts=a.counts + b.counts,
             rec_items=rec[:, :cfg.d],
@@ -255,10 +306,25 @@ class LSHSSEstimator(Estimator):
             n=jnp.maximum(a.n - b.n, 0), sid=a.sid, step=a.step)
 
     # -- estimation ----------------------------------------------------
-    def _table(self, counts, same_sim, same_tags, cross_sim, cross_tags,
-               n) -> EstimateTable:
+    def _stderr(self, same_sim, same_tags, same_seen, cross_sim, cross_tags,
+                cross_seen, same_pairs, cross_pairs, n, step):
+        """(N, L) stratified-bootstrap stderr, or zeros when disabled."""
+        if not self.bootstrap:
+            return np.zeros((np.asarray(n).shape[0], self.num_levels))
+        return uncertainty.stratified_bootstrap_stderr(
+            same_sim, same_tags >= 0, same_seen,
+            cross_sim, cross_tags >= 0, cross_seen,
+            same_pairs, cross_pairs, d=self.d, s=self.s,
+            seed=self.cfg.seed, n=n, step=step,
+            replicates=self.bootstrap)
+
+    def _table(self, counts, same_sim, same_tags, same_seen, cross_sim,
+               cross_tags, cross_seen, n, step) -> EstimateTable:
         """Vectorized numpy: stratum totals from the bucket counts, per-
-        stratum level fractions from the pair reservoirs, Eq. of §2.3."""
+        stratum level fractions from the pair reservoirs, Eq. of §2.3.
+        Error bars: the stratified bootstrap of DESIGN.md §14 (the bucket
+        totals are linear and near-exact; the pair-reservoir fractions
+        carry the sampling randomness)."""
         counts = counts.astype(np.float64)
         same_pairs = (counts * (counts - 1)).sum(axis=-1)       # ordered
         total = n * (n - 1)
@@ -278,9 +344,13 @@ class LSHSSEstimator(Estimator):
         x_full = f1 * same_pairs[:, None] + f2 * cross_pairs[:, None]
         x = x_full[:, self.s:]
         g = np.cumsum(x[:, ::-1], axis=1)[:, ::-1] + n[:, None]
-        zeros = np.zeros_like(x)
+        stderr = self._stderr(same_sim, same_tags, same_seen, cross_sim,
+                              cross_tags, cross_seen, same_pairs,
+                              cross_pairs, n, step)
         return EstimateTable(x=x, g=g, y=y1[:, self.s:], n=n,
-                             stderr=zeros, stderr_offline=zeros)
+                             stderr=stderr, stderr_offline=stderr,
+                             stderr_kind=("bootstrap_stratified"
+                                          if self.bootstrap else "none"))
 
     def estimate_batch(self, states, *, clamp: bool = True,
                        use_pallas: bool | None = None,
@@ -288,13 +358,17 @@ class LSHSSEstimator(Estimator):
         del clamp, use_pallas, interpret           # pure host-numpy math
         get = lambda a: np.asarray(jax.device_get(a))
         return self._table(get(states.counts), get(states.same_sim),
-                           get(states.same_tags), get(states.cross_sim),
-                           get(states.cross_tags),
-                           get(states.n).astype(np.float64))
+                           get(states.same_tags), get(states.same_seen),
+                           get(states.cross_sim), get(states.cross_tags),
+                           get(states.cross_seen),
+                           get(states.n).astype(np.float64),
+                           get(states.step))
 
     def estimate_ref(self, state: LSHSSState, *,
                      clamp: bool = True) -> EstimateTable:
-        """Scalar python-loop oracle for the batched numpy path."""
+        """Scalar python-loop oracle for the batched numpy path (the
+        stderr column reuses the shared stratified bootstrap, whose
+        per-stream PRNG makes batch == ref by construction)."""
         del clamp
         get = lambda a: np.asarray(jax.device_get(a))
         counts = get(state.counts).astype(np.int64)
@@ -317,10 +391,17 @@ class LSHSSEstimator(Estimator):
                     x[k] += hits / m * pairs
         xs = x[self.s:]
         g = np.array([xs[i:].sum() + n for i in range(self.num_levels)])
-        zeros = np.zeros((1, self.num_levels))
+        stderr = self._stderr(
+            get(state.same_sim)[None], get(state.same_tags)[None],
+            get(state.same_seen)[None], get(state.cross_sim)[None],
+            get(state.cross_tags)[None], get(state.cross_seen)[None],
+            np.array([same_pairs]), np.array([cross_pairs]),
+            np.array([n]), get(state.step)[None])
         return EstimateTable(x=xs[None], g=g[None], y=y[self.s:][None],
-                             n=np.array([n]), stderr=zeros,
-                             stderr_offline=zeros)
+                             n=np.array([n]), stderr=stderr,
+                             stderr_offline=stderr,
+                             stderr_kind=("bootstrap_stratified"
+                                          if self.bootstrap else "none"))
 
 
 def derive_config(sjpc_cfg: SJPCConfig, *, num_hash_cols: int = 1) -> LSHSSConfig:
@@ -342,10 +423,10 @@ def derive_config(sjpc_cfg: SJPCConfig, *, num_hash_cols: int = 1) -> LSHSSConfi
 
 def _factory(sjpc_cfg: SJPCConfig, *, params=None, estimator_cfg=None,
              opts=None):
-    del params, opts          # host-numpy estimation: no dispatch flags
+    del params                # no shared hash randomness
     if estimator_cfg is None:
         estimator_cfg = derive_config(sjpc_cfg)
-    return LSHSSEstimator(estimator_cfg)
+    return LSHSSEstimator(estimator_cfg, **(dict(opts) if opts else {}))
 
 
 register("lsh_ss", _factory)

@@ -19,11 +19,17 @@ uniform sampling is pinned statistically in tests/test_estimators.py.
 
 Epoch algebra: inserted items are tagged with the state's ``sid``
 (provenance).  ``merge`` is the deterministic weighted union of
-base.merge_tagged_samples; ``subtract(a, b)`` drops a's items tagged with
-b's sid -- exact for the per-epoch states the sliding window hands it
-(dropping one component of a uniform sample of a union leaves a uniform
-sample of the rest), at the honest streaming cost that expired slots
-cannot be refilled from data the sample never kept.
+base.merge_tagged_samples (``backing > 0`` folds into an expanded total
+-- the window's backing-epoch refill, DESIGN.md §14.2); ``subtract(a,
+b)`` drops a's items tagged with b's sid -- exact for the per-epoch
+states the sliding window hands it (dropping one component of a uniform
+sample of a union leaves a uniform sample of the rest), at the honest
+streaming cost that expired slots cannot be refilled from data the
+sample never kept.
+
+Error bars: the bootstrap-with-Serfling stderr of
+estimators/uncertainty.py (stderr_kind "bootstrap"), with every
+replicate histogram riding the fused kernel's N axis in one launch.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ import jax.numpy as jnp
 from repro.core import exact
 from repro.core.sjpc import SJPCConfig
 
+from . import uncertainty
 from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
                    scan_rounds)
 
@@ -82,10 +89,15 @@ def reservoir_accept(key, n0, mask, capacity: int):
     pos = jnp.cumsum(mask.astype(jnp.int32)) - 1       # index among candidates
     gidx = n0 + pos                                    # global arrival index
     ku, ks = jax.random.split(key)
-    u = jax.random.uniform(ku, (B,))
+    # acceptance w.p. capacity/(gidx+1), decided on INTEGERS: draw a
+    # uniform arrival rank r in [0, gidx] and accept iff r < capacity.
+    # The float form u * (gidx+1) < capacity loses exactness once gidx
+    # crosses 2^24 (f32 rounds adjacent arrival indices together, skewing
+    # retention on long streams -- the drift the int32 ``n`` comment
+    # guards against); the integer draw is exact to the int32 range.
+    rank = jax.random.randint(ku, (B,), 0, jnp.maximum(gidx + 1, 1))
     rand_slot = jax.random.randint(ks, (B,), 0, capacity)
-    accept = maskb & ((gidx < capacity)
-                      | (u * (gidx + 1).astype(jnp.float32) < capacity))
+    accept = maskb & ((gidx < capacity) | (rank < capacity))
     slot = jnp.where(gidx < capacity, jnp.clip(gidx, 0, capacity - 1),
                      rand_slot)
     order = jnp.where(accept, pos, -1)
@@ -107,10 +119,21 @@ class ReservoirEstimator(Estimator):
 
     def __init__(self, cfg: ReservoirConfig, *,
                  use_pallas: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 bootstrap_replicates: int = uncertainty.DEFAULT_REPLICATES,
+                 bootstrap_item_cap: int = uncertainty.DEFAULT_ITEM_CAP):
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.interpret = interpret
+        # bootstrap error bars (0 replicates disables -> stderr_kind
+        # "none"); a capacity-1 reservoir can never hold a pair, so its
+        # bars would be identically zero -- disable rather than mislabel
+        if bootstrap_replicates == 1:
+            raise ValueError("bootstrap_replicates must be 0 (disabled) "
+                             "or >= 2 (a std needs two replicates)")
+        self.bootstrap = (int(bootstrap_replicates) if cfg.capacity >= 2
+                          else 0)
+        self.bootstrap_cap = int(bootstrap_item_cap)
         self._rounds_fn = jax.jit(
             functools.partial(scan_rounds, self._ingest_one))
 
@@ -157,10 +180,20 @@ class ReservoirEstimator(Estimator):
         return self._rounds_fn(states, jnp.asarray(values),
                                jnp.asarray(row_mask), keys)
 
-    def merge(self, a: ReservoirState, b: ReservoirState) -> ReservoirState:
+    def refill_capacity(self, backing: int) -> int:
+        """Fold capacity with ``backing`` half-capacity backing epochs
+        (the window refill of DESIGN.md §14.2): cap + backing * cap//2."""
+        return self.cfg.capacity + backing * (self.cfg.capacity // 2)
+
+    def merge(self, a: ReservoirState, b: ReservoirState, *,
+              backing: int = 0) -> ReservoirState:
+        """Deterministic weighted union.  ``backing > 0`` merges into an
+        *expanded* sample of ``refill_capacity(backing)`` slots -- the
+        window's backing-epoch refill fold; the inputs may be any mix of
+        base-capacity epoch states and already-expanded totals."""
         items, tags = merge_tagged_samples(
             a.items, a.tags, a.n, b.items, b.tags, b.n,
-            self.cfg.capacity, _MERGE_SALT ^ self.cfg.seed)
+            self.refill_capacity(backing), _MERGE_SALT ^ self.cfg.seed)
         return ReservoirState(items=items, tags=tags, n=a.n + b.n,
                               sid=jnp.maximum(a.sid, b.sid),
                               step=a.step + b.step)
@@ -174,48 +207,88 @@ class ReservoirEstimator(Estimator):
             sid=a.sid, step=a.step)
 
     # -- estimation ----------------------------------------------------
-    def _table(self, hist: np.ndarray, n: np.ndarray,
-               m: np.ndarray) -> EstimateTable:
+    def _table(self, hist: np.ndarray, n: np.ndarray, m: np.ndarray,
+               stderr: np.ndarray | None = None) -> EstimateTable:
         """hist (N, d+1) float64 sample pair counts -> the (N, L) table.
         Scale n(n-1)/(m(m-1)); m < 2 yields the zero histogram (the
         empty-stream guard of baselines.random_sampling_pair_counts)."""
-        with np.errstate(divide="ignore", invalid="ignore"):
-            scale = np.where(m >= 2, n * (n - 1)
-                             / np.maximum(m * (m - 1), 1.0), 0.0)
-        x_full = hist * scale[:, None]                     # (N, d+1)
+        x_full = hist * uncertainty.pair_scale(n, m)[:, None]  # (N, d+1)
         x = x_full[:, self.s:]
         g = np.cumsum(x[:, ::-1], axis=1)[:, ::-1] + n[:, None]
-        zeros = np.zeros_like(x)
+        if stderr is None:
+            stderr = np.zeros_like(x)
+        # the reservoir is a pure sampling estimator: the online and the
+        # sampling-only (offline) bars coincide
         return EstimateTable(x=x, g=g, y=hist[:, self.s:], n=n,
-                             stderr=zeros, stderr_offline=zeros)
+                             stderr=stderr, stderr_offline=stderr,
+                             stderr_kind=("bootstrap" if self.bootstrap
+                                          else "none"))
+
+    def _bootstrap_stderr(self, items, valid, n, step, *, use_pallas,
+                          interpret, pair_fn=None) -> np.ndarray | None:
+        """(N, L) bootstrap-with-Serfling stderr of the g table, or None
+        when disabled (bootstrap_replicates=0)."""
+        if not self.bootstrap:
+            return None
+        keys = uncertainty.bootstrap_key(self.cfg.seed, n, step)
+        return uncertainty.bootstrap_pair_stderr(
+            items, valid, np.asarray(jax.device_get(n), np.float64),
+            keys=keys, s=self.s, replicates=self.bootstrap,
+            item_cap=self.bootstrap_cap, use_pallas=use_pallas,
+            interpret=interpret, pair_fn=pair_fn)
 
     def estimate_batch(self, states, *, clamp: bool = True,
                        use_pallas: bool | None = None,
                        interpret: bool | None = None) -> EstimateTable:
         del clamp                                  # counts are >= 0 already
         from repro.kernels.ops import fused_pairs
-        tags = np.asarray(jax.device_get(states.tags))
-        valid = (tags >= 0).astype(np.int32)
+        use_pallas = self.use_pallas if use_pallas is None else use_pallas
+        interpret = self.interpret if interpret is None else interpret
+        # device arrays flow straight into the kernel (no host round-trip
+        # re-uploading the sample per query); only the small outputs --
+        # histogram, valid counts, n -- are fetched
+        valid = (jnp.asarray(states.tags) >= 0).astype(jnp.int32)
         hist = np.asarray(jax.device_get(fused_pairs(
-            jax.device_get(states.items), valid,
-            use_pallas=self.use_pallas if use_pallas is None else use_pallas,
-            interpret=self.interpret if interpret is None else interpret,
+            states.items, valid, use_pallas=use_pallas, interpret=interpret,
         ))).astype(np.float64)
         n = np.asarray(jax.device_get(states.n), np.float64)
-        return self._table(hist, n, valid.sum(axis=1).astype(np.float64))
+        m = np.asarray(jax.device_get(valid.sum(axis=1)), np.float64)
+        stderr = self._bootstrap_stderr(states.items, valid, states.n,
+                                        states.step, use_pallas=use_pallas,
+                                        interpret=interpret)
+        return self._table(hist, n, m, stderr)
 
     def estimate_ref(self, state: ReservoirState, *,
                      clamp: bool = True) -> EstimateTable:
         """O(m^2 d) numpy oracle: brute-force histogram of the valid
-        sample (core.exact), then the identical scaling."""
+        sample (core.exact), then the identical scaling.  The bootstrap
+        stderr re-draws the same replicate indices (same per-state keys)
+        but bins them through the numpy oracle."""
         del clamp
         tags = np.asarray(jax.device_get(state.tags))
-        items = np.asarray(jax.device_get(state.items))[tags >= 0]
-        hist = (exact.brute_force_pair_counts(items) if items.shape[0]
-                else np.zeros(self.d + 1))
+        valid = (tags >= 0).astype(np.int32)
+        items = np.asarray(jax.device_get(state.items))
+        hist = (exact.brute_force_pair_counts(items[tags >= 0])
+                if items[tags >= 0].shape[0] else np.zeros(self.d + 1))
         n = np.array([self.state_n(state)], np.float64)
+
+        def pair_fn(it, va):
+            it, va = np.asarray(it), np.asarray(va)
+            lead = it.shape[:-2]
+            flat_it = it.reshape((-1,) + it.shape[-2:])
+            flat_va = va.reshape((-1, va.shape[-1]))
+            out = np.stack([exact.brute_force_pair_counts(r[v != 0])
+                            if (v != 0).sum() else np.zeros(self.d + 1)
+                            for r, v in zip(flat_it, flat_va)])
+            return out.reshape(lead + (self.d + 1,))
+
+        stderr = self._bootstrap_stderr(
+            items[None], valid[None], jnp.asarray(state.n)[None],
+            jnp.asarray(state.step)[None], use_pallas=False,
+            interpret=None, pair_fn=pair_fn)
         return self._table(hist[None], n,
-                           np.array([items.shape[0]], np.float64))
+                           np.array([float(valid.sum())], np.float64),
+                           stderr)
 
 
 def capacity_for_bytes(sjpc_cfg: SJPCConfig) -> int:

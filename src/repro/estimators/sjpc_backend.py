@@ -84,7 +84,7 @@ class SJPCEstimator(Estimator):
             self.cfg, states.counters, states.n, clamp=clamp,
             use_pallas=self.use_pallas if use_pallas is None else use_pallas,
             interpret=self.interpret if interpret is None else interpret)
-        return EstimateTable(*be)
+        return EstimateTable(*be, stderr_kind="analytic")
 
     def estimate_ref(self, state: SJPCState, *,
                      clamp: bool = True) -> EstimateTable:
@@ -107,7 +107,8 @@ class SJPCEstimator(Estimator):
                     cfg.d, s, cfg.ratio, cfg.width, n, g[i])) * g[i]
         return EstimateTable(x=x[None], g=g[None], y=np.asarray(y)[None],
                              n=np.array([n]), stderr=on[None],
-                             stderr_offline=off[None])
+                             stderr_offline=off[None],
+                             stderr_kind="analytic")
 
     # -- join (SJPC-only capability) ----------------------------------
     def estimate_join_batch(self, states_a, states_b, *, clamp: bool = True,
@@ -118,7 +119,7 @@ class SJPCEstimator(Estimator):
             states_a.n, states_b.n, clamp=clamp,
             use_pallas=self.use_pallas if use_pallas is None else use_pallas,
             interpret=self.interpret if interpret is None else interpret)
-        return EstimateTable(*be)
+        return EstimateTable(*be, stderr_kind="analytic")
 
     def estimate_join_ref(self, state_a, state_b, *,
                           clamp: bool = True) -> EstimateTable:
@@ -142,7 +143,8 @@ class SJPCEstimator(Estimator):
                 cfg.d, s, cfg.ratio, cfg.width, n, gp)) * gp
         return EstimateTable(x=x[None], g=g[None], y=np.asarray(y)[None],
                              n=np.array([[n_a, n_b]]), stderr=on[None],
-                             stderr_offline=off[None])
+                             stderr_offline=off[None],
+                             stderr_kind="analytic")
 
 
 def _factory(sjpc_cfg, *, params=None, estimator_cfg=None, opts=None):

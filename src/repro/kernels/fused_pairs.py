@@ -28,6 +28,12 @@ int32.  The pure-jnp fallback (kernels/ref.py:fused_pairs_ref) is
 bit-identical; both are tested against the O(n^2) numpy oracle
 (core/exact.py:brute_force_pair_counts) across depths/widths/empty inputs
 in tests/test_fused_pairs.py.
+
+The N grid axis is the batching surface for more than streams: the
+bootstrap error bars (estimators/uncertainty.py, DESIGN.md §14) flatten
+their (streams, replicates) stack into it through ``kernels.ops
+.fused_pairs`` (which accepts arbitrary leading dims), so B resampled
+histograms per stream cost one launch, not B.
 """
 from __future__ import annotations
 

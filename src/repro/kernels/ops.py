@@ -122,21 +122,34 @@ def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
                 block_r=None):
     """All-pairs similarity histogram of stacked reservoir samples.
 
-    items (N, R, d) uint32, valid (N, R) -> (N, d+1) int32 counts of
-    ordered valid pairs agreeing on exactly k columns (the reservoir
-    estimator's query hot path).  Pallas keeps the histogram accumulator
-    VMEM-resident across pair tiles; the fallback is the jnp per-column
-    reduction (bit-identical -- both are exact integer counts).
+    items (..., R, d) uint32, valid (..., R) -> (..., d+1) int32 counts
+    of ordered valid pairs agreeing on exactly k columns (the reservoir
+    estimator's query hot path).  Extra leading dims collapse into the
+    kernel's N grid axis and are restored on the output -- the bootstrap
+    error bars (DESIGN.md §14) push their whole (streams, replicates)
+    stack through ONE launch this way.  Pallas keeps the histogram
+    accumulator VMEM-resident across pair tiles; the fallback is the jnp
+    per-column reduction (bit-identical -- both are exact integer counts).
     """
-    if items.shape[1] == 0:                    # empty sample: zero histogram
-        return jnp.zeros((items.shape[0], items.shape[2] + 1), jnp.int32)
+    items = jnp.asarray(items)
+    valid = jnp.asarray(valid)
+    lead = items.shape[:-2]
+    assert valid.shape == lead + items.shape[-2:-1], (items.shape,
+                                                      valid.shape)
+    R, d = items.shape[-2:]
+    if R == 0:                                 # empty sample: zero histogram
+        return jnp.zeros(lead + (d + 1,), jnp.int32)
+    items = items.reshape((-1, R, d))
+    valid = valid.reshape((-1, R))
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
-        return ref.fused_pairs_ref(jnp.asarray(items), jnp.asarray(valid))
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    kwargs = {} if block_r is None else {"block_r": block_r}
-    return fused_pairs_pallas(items, valid, interpret=interpret, **kwargs)
+        out = ref.fused_pairs_ref(items, valid)
+    else:
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        kwargs = {} if block_r is None else {"block_r": block_r}
+        out = fused_pairs_pallas(items, valid, interpret=interpret, **kwargs)
+    return out.reshape(lead + (d + 1,))
 
 
 def make_sjpc_update_fn(*, use_pallas=None, interpret=None):

@@ -59,6 +59,7 @@ from repro.kernels.ops import make_sjpc_update_fn
 from .registry import HashGroup, StreamEntry
 
 _INGEST_SALT = 0x5E41CE
+_EMPTY = np.zeros((0,))          # shape probe for absent pending entries
 
 
 def ingest_key(cfg: SJPCConfig, uid: int, round_idx: int) -> jax.Array:
@@ -253,9 +254,16 @@ class IngestPipeline:
                 values[r, i, :chunk.shape[0]] = chunk
                 mask[r, i, :chunk.shape[0]] = 1
                 self.stats["padded_rows"] += B - chunk.shape[0]
+            # streams with no pending records ride along fully masked (the
+            # cohort's S stays jit-shape-stable) but neither consume round
+            # keys nor commit the ride-along state below: their window
+            # content is unchanged, and committing the step-only bump
+            # would spuriously bump the version and thrash version-keyed
+            # query caches
             round_idx[:, i] = e.flushes + np.arange(rounds)
-            e.flushes += rounds
-            e.records += int(rows.shape[0])
+            if rows.shape[0]:
+                e.flushes += rounds
+                e.records += int(rows.shape[0])
 
         keys = ingest_key_grid(
             jnp.uint32(est.ingest_seed),
@@ -268,4 +276,5 @@ class IngestPipeline:
         self.stats["dispatches"] += 1
         self.stats["dispatch_rows"] += S * B * rounds
         for i, e in enumerate(entries):
-            out[e.name] = index_state(states, i)
+            if pending.get(e.name, _EMPTY).shape[0]:
+                out[e.name] = index_state(states, i)

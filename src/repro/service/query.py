@@ -38,6 +38,7 @@ import dataclasses
 from typing import NamedTuple
 
 import numpy as np
+import jax
 
 from repro.core.sjpc import SJPCConfig
 from repro.estimators import Estimator, stack_states
@@ -52,11 +53,22 @@ class QueryResult(NamedTuple):
     streams: tuple             # 1 or 2 stream names
     s: int                     # threshold the estimate answers
     estimate: float            # g_s (self-join) or join size
-    stderr: float              # absolute 1-sigma bound (online, Theorem 2)
-    stderr_offline: float      # absolute 1-sigma bound (sampling only, Thm 1)
+    stderr: float              # absolute 1-sigma bound/estimate (online)
+    stderr_offline: float      # absolute 1-sigma, sampling-only variant
     per_level: np.ndarray      # X_k for k = s..d
     n: tuple                   # records in the window, per stream
     window_epochs: tuple       # live epochs per stream (coverage metadata)
+    stderr_kind: str = "none"  # uncertainty method behind stderr:
+    #   "analytic" (Thm 1/2 bounds), "bootstrap", "bootstrap_stratified",
+    #   or "none" (no bars available; stderr is 0)
+
+    def ci(self, z: float = 1.96) -> tuple:
+        """The +/- z-sigma confidence interval, floored at 0 (both g_s
+        and join sizes are non-negative counts).  The default z is the
+        normal 95% quantile; for "analytic" kinds the bounds are
+        conservative, so coverage is >= the nominal level."""
+        return (max(self.estimate - z * self.stderr, 0.0),
+                self.estimate + z * self.stderr)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +83,9 @@ class _StreamView:
     window_epochs: int | None
     group_id: str
     version: int               # window version at snapshot time (cache key)
+    shape_sig: tuple = ()      # state leaf shapes: same-estimator streams
+    #   with different window geometry (backing-epoch refill expands the
+    #   sample-window total) must batch in separate stacks
 
 
 class Snapshot:
@@ -101,23 +116,29 @@ class Snapshot:
         return self._views[name]
 
     # -- fused batched path --------------------------------------------
-    def _cohort_views(self, group_id: str, eid: int) -> list[_StreamView]:
+    def _cohort_views(self, group_id: str, eid: int,
+                      shape_sig: tuple) -> list[_StreamView]:
         # cohorts key on the estimator INSTANCE (id), not the kind: a
         # same-kind stream with an explicit estimator_cfg override has its
-        # own engine (and possibly state shapes) and must batch separately
+        # own engine (and possibly state shapes) and must batch separately.
+        # The shape signature further splits same-engine streams whose
+        # window geometry differs (a backing-epoch refill total is wider
+        # than an unexpanded one; stacking them would shape-mismatch)
         return [v for v in self._views.values()
-                if v.group_id == group_id and id(v.estimator) == eid]
+                if v.group_id == group_id and id(v.estimator) == eid
+                and v.shape_sig == shape_sig]
 
-    def _self_batch(self, group_id: str, eid: int, clamp: bool):
+    def _self_batch(self, view: _StreamView, clamp: bool):
         """The one batched call answering every (stream, threshold) cell of
         a hash group's estimator cohort; memoized by the member windows'
         versions (shared engine cache) and per-snapshot (versions are fixed
         within one snapshot, so repeated queries skip rebuilding the
         version key)."""
-        local_key = (group_id, eid, clamp)
+        group_id, eid = view.group_id, id(view.estimator)
+        local_key = (group_id, eid, view.shape_sig, clamp)
         if local_key in self._local:
             return self._local[local_key]
-        views = self._cohort_views(group_id, eid)
+        views = self._cohort_views(group_id, eid, view.shape_sig)
         key = ("self", group_id, views[0].kind, clamp,
                tuple((v.name, v.version) for v in views))
         if key not in self._cache:
@@ -140,7 +161,10 @@ class Snapshot:
             interpret=self._interpret)
         for i, (va, vb) in enumerate(zip(views_a, views_b)):
             k = ("join", va.name, va.version, vb.name, vb.version, clamp)
-            self._cache[k] = type(est)(*(a[i:i + 1] for a in est))
+            # slice array fields to the pair's row; scalar metadata
+            # (stderr_kind) passes through unsliced
+            self._cache[k] = type(est)(*(a[i:i + 1] if isinstance(
+                a, np.ndarray) else a for a in est))
 
     def prefetch(self, queries, *, clamp: bool = True) -> None:
         """Warm the cache for a batch of :class:`ContinuousQuery` -- one
@@ -158,8 +182,7 @@ class Snapshot:
                 if k not in self._cache:
                     join_pairs.setdefault(va.group_id, []).append((a, b))
             else:
-                v = self._view(q.streams[0])
-                self._self_batch(v.group_id, id(v.estimator), clamp)
+                self._self_batch(self._view(q.streams[0]), clamp)
         for pairs in join_pairs.values():
             self._join_batch(sorted(set(pairs)), clamp)
 
@@ -184,7 +207,7 @@ class Snapshot:
                              f"[{v.cfg.s}, {v.cfg.d}] of {name!r}")
         li = s - v.cfg.s
         if self._use_fused:
-            index, est = self._self_batch(v.group_id, id(v.estimator), clamp)
+            index, est = self._self_batch(v, clamp)
             i = index[name]
         else:
             est = self._ref_table(name, clamp)
@@ -193,7 +216,7 @@ class Snapshot:
         on, off = float(est.stderr[i, li]), float(est.stderr_offline[i, li])
         xs = est.x[i, li:]
         return QueryResult("self_join", (name,), s, g, on, off, xs,
-                           (v.n,), (v.live_epochs,))
+                           (v.n,), (v.live_epochs,), est.stderr_kind)
 
     def join(self, a: str, b: str, s: int | None = None, *,
              clamp: bool = True) -> QueryResult:
@@ -220,7 +243,8 @@ class Snapshot:
         on, off = float(est.stderr[0, li]), float(est.stderr_offline[0, li])
         xs = est.x[0, li:]
         return QueryResult("join", (a, b), s, j, on, off, xs,
-                           (va.n, vb.n), (va.live_epochs, vb.live_epochs))
+                           (va.n, vb.n), (va.live_epochs, vb.live_epochs),
+                           est.stderr_kind)
 
     def all_thresholds(self, name: str, *, clamp: bool = True) -> dict[int, QueryResult]:
         """g_k for every k in [cfg.s, d] -- one batch lookup, d-s+1 results."""
@@ -275,7 +299,9 @@ class QueryEngine:
                 n=e.window.n_live(),
                 live_epochs=e.window.live_epochs,
                 window_epochs=e.window.window_epochs,
-                group_id=e.group_id, version=e.window.version)
+                group_id=e.group_id, version=e.window.version,
+                shape_sig=tuple(tuple(np.shape(leaf)) for leaf in
+                                jax.tree_util.tree_leaves(st)))
         return Snapshot(views, self._registry,
                         use_fused_query=self.use_fused_query,
                         use_pallas=self.use_pallas, interpret=self.interpret,

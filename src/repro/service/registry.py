@@ -95,14 +95,16 @@ class StreamRegistry:
     def register(self, name: str, group_id: str,
                  window_epochs: int | None = None, *,
                  estimator: str = "sjpc",
-                 estimator_cfg=None) -> StreamEntry:
+                 estimator_cfg=None,
+                 backing_epochs: int = 0) -> StreamEntry:
         if name in self._streams:
             raise ValueError(f"stream {name!r} already registered")
         group = self.group(group_id)
         est = group.estimator(estimator, estimator_cfg)
         entry = StreamEntry(
             name=name, group_id=group_id, uid=self._next_uid,
-            window=WindowedSketch(est, est.init(sid=0), window_epochs),
+            window=WindowedSketch(est, est.init(sid=0), window_epochs,
+                                  backing_epochs=backing_epochs),
             estimator_kind=estimator)
         self._next_uid += 1
         self._streams[name] = entry

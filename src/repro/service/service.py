@@ -51,6 +51,9 @@ class ServiceConfig:
     estimator: str = "sjpc"          # default estimator kind for new streams
                                      # (any repro.estimators kind; per-stream
                                      # override at create_stream)
+    backing_epochs: int = 0          # default sample-window refill depth K
+                                     # (DESIGN.md §14.2; per-stream override
+                                     # at create_stream; sample kinds only)
 
 
 class EstimationService:
@@ -87,17 +90,32 @@ class EstimationService:
     def create_stream(self, name: str, group_id: str,
                       window_epochs=_DEFAULT_WINDOW, *,
                       estimator: str | None = None,
-                      estimator_cfg=None) -> StreamEntry:
+                      estimator_cfg=None,
+                      backing_epochs: int | None = None) -> StreamEntry:
         """Register a stream.  ``estimator`` picks the protocol kind
         ("sjpc" | "reservoir" | "lsh_ss", default from ServiceConfig);
         competitors derive an equal-space config from the group's
-        SJPCConfig unless ``estimator_cfg`` overrides it."""
+        SJPCConfig unless ``estimator_cfg`` overrides it.
+        ``backing_epochs`` enables the sample-window refill fold for
+        windowed sample estimators (default from ServiceConfig; linear
+        kinds reject it -- their expiry is exact already)."""
         if window_epochs is _DEFAULT_WINDOW:
             window_epochs = self.cfg.window_epochs
+        kind = estimator or self.cfg.estimator
+        if backing_epochs is None:
+            backing = self.cfg.backing_epochs
+            # the config-level default applies only where it is meaningful
+            # (bounded sample windows); explicit arguments stay strict.
+            # ``linear`` is a kind-level capability, so the group's cached
+            # instance answers for cfg-overridden streams too
+            if (self.registry.group(group_id).estimator(kind).linear
+                    or window_epochs is None):
+                backing = 0
+        else:
+            backing = backing_epochs
         return self.registry.register(
-            name, group_id, window_epochs,
-            estimator=estimator or self.cfg.estimator,
-            estimator_cfg=estimator_cfg)
+            name, group_id, window_epochs, estimator=kind,
+            estimator_cfg=estimator_cfg, backing_epochs=backing)
 
     # -- ingest ---------------------------------------------------------
     def ingest(self, name: str, records) -> int:

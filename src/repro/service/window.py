@@ -26,6 +26,16 @@ far off the per-record hot path.  Expired epochs drop whole slots, so
 expiry is exact in n and provenance; the honest streaming cost is that a
 merged sample cannot refill slots from data it never kept.
 
+``backing_epochs = K`` (sample windows only) bounds the fold's
+compression loss: the W live slots together retain up to W x capacity
+records, but the plain fold shrinks them to ONE base-capacity total --
+after every expiry the served sample is 1/W of what the window actually
+kept.  With K backing epochs each sample structure folds at capacity
+cap + K * cap//2 (K half-capacity backing slots), so ``_refold`` refills
+the total from kept per-epoch data instead of discarding it; the
+effective sample size a query sees grows by the same factor, and the
+bootstrap error bars of DESIGN.md §14 shrink accordingly.
+
 ``window_epochs=None`` means an unbounded (whole-stream) window for
 either strategy -- no ring, nothing expires, ingest goes straight into
 ``total``.
@@ -54,11 +64,23 @@ class WindowedSketch:
     :meth:`absorb_delta` once)."""
 
     def __init__(self, estimator: Estimator, init_state,
-                 window_epochs: int | None = None):
+                 window_epochs: int | None = None,
+                 backing_epochs: int = 0):
         assert window_epochs is None or window_epochs >= 1
         self.estimator = estimator
         self.cfg = getattr(estimator, "cfg", None)
         self.window_epochs = window_epochs
+        self.backing_epochs = int(backing_epochs)
+        if self.backing_epochs:
+            if estimator.linear:
+                raise ValueError(
+                    "backing_epochs is a sample-window refill; linear "
+                    f"estimators ({estimator.kind!r}) expire exactly by "
+                    "subtraction and have nothing to refill")
+            if window_epochs is None:
+                raise ValueError(
+                    "backing_epochs needs a bounded window (unbounded "
+                    "sample windows never expire, so never shrink)")
         self.total = init_state
         self.epoch = 0                      # index of the open epoch
         self.version = 0                    # bumped whenever ``total`` changes
@@ -73,6 +95,10 @@ class WindowedSketch:
             # ring of per-epoch STATES; slot sid = epoch for provenance
             self._slots: list = [None] * window_epochs
             self._slots[0] = init_state
+            if self.backing_epochs:
+                # ``total`` folds at expanded capacity from version 0 so
+                # its pytree shape never changes across rotations
+                self._refold()
         self._pos = 0                       # slot of the open epoch
         self._live = 1                      # live epochs incl. the open one
 
@@ -90,8 +116,17 @@ class WindowedSketch:
         the delta vs the previous total is credited to the open epoch's
         ring slot.  Sample: the open slot is replaced and the live-window
         fold refreshed."""
-        if new_state is self.ingest_base():
-            return          # no-op flush: nothing changed, keep the version
+        base = self.ingest_base()
+        new_leaves = jax.tree_util.tree_leaves(new_state)
+        base_leaves = jax.tree_util.tree_leaves(base)
+        if new_state is base or (
+                len(new_leaves) == len(base_leaves)
+                and all(a is b for a, b in zip(new_leaves, base_leaves))):
+            # no-op flush: nothing changed, keep the version.  The leaf
+            # check hardens the identity test against pipelines that
+            # re-wrap unchanged leaves in a new pytree container -- an
+            # equal-but-new state must not thrash version-keyed caches
+            return
         self.version += 1
         if self.window_epochs is None or self.estimator.linear:
             if self.window_epochs is not None:
@@ -105,11 +140,25 @@ class WindowedSketch:
             self._refold()
 
     def _refold(self) -> None:
-        """total = merge-fold of the live ring slots (sample windows)."""
+        """total = merge-fold of the live ring slots (sample windows).
+
+        With ``backing_epochs = K`` the fold runs at *expanded* capacity
+        (each sample structure gains K half-capacity backing slots, see
+        ``Estimator.refill_capacity``): instead of compressing the W kept
+        per-epoch samples down to one base-capacity state, the refold
+        refills the expanded total from the data the slots kept -- so an
+        expiry no longer shrinks the served sample to 1/W of what the
+        window retains (DESIGN.md §14.2)."""
         live = [s for s in self._slots if s is not None]
+        K = self.backing_epochs
+        if K and len(live) == 1:
+            # singleton fold still expands (stable total shape): merge
+            # with an empty state of the same kind
+            live = live + [self.estimator.init(sid=0)]
         total = live[0]
         for s in live[1:]:
-            total = self.estimator.merge(total, s)
+            total = (self.estimator.merge(total, s, backing=K) if K
+                     else self.estimator.merge(total, s))
         self.total = total
 
     def advance_epoch(self) -> None:
@@ -179,4 +228,7 @@ class WindowedSketch:
         base = self.estimator.memory_bytes()
         if self.window_epochs is None:
             return base
-        return base * (1 + self.window_epochs)
+        # backing-epoch refill: the expanded total carries K extra
+        # half-capacity backing slots per sample structure
+        return (base * (1 + self.window_epochs)
+                + self.backing_epochs * (base // 2))

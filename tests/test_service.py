@@ -476,3 +476,99 @@ class TestDriverServiceClient:
         # worth of records, not the whole stream
         win_n = svc.snapshot().self_join("train").n[0]
         assert win_n <= 2 * 8 * 2 * 6   # generous cap: < whole stream anyway
+
+
+class TestVersionStabilityAcrossCohortFlush:
+    """The ingest pipeline must not thrash version-keyed query caches:
+    a flush that carries no records for a stream -- even when cohort
+    mates DO flush and the stream rides along fully masked for jit shape
+    stability -- leaves that stream's window version (and flush replay
+    coordinate) untouched."""
+
+    def _build(self, estimator="sjpc"):
+        cfg = SJPCConfig(d=4, s=3, ratio=1.0, width=128, depth=2, seed=7)
+        svc = EstimationService(ServiceConfig(batch_rows=16,
+                                              window_epochs=None))
+        svc.create_group("g", cfg)
+        svc.create_stream("busy", "g", estimator=estimator)
+        svc.create_stream("idle", "g", estimator=estimator)
+        return svc
+
+    @pytest.mark.parametrize("estimator", ["sjpc", "reservoir"])
+    def test_cohort_mate_flush_preserves_idle_version(self, estimator):
+        svc = self._build(estimator)
+        rng = np.random.default_rng(3)
+        svc.ingest("busy", _records(rng, 40, 4))
+        svc.ingest("idle", _records(rng, 40, 4))
+        svc.flush()
+        idle = svc.registry.stream("idle")
+        v0, f0 = idle.window.version, idle.flushes
+        r0 = svc.snapshot().self_join("idle")
+        cached = len(svc.engine._cache)
+        # three flushes with records for the cohort mate only
+        for _ in range(3):
+            svc.ingest("busy", _records(rng, 40, 4))
+            svc.flush()
+        assert idle.window.version == v0
+        assert idle.flushes == f0
+        r1 = svc.snapshot().self_join("idle")
+        assert r1.estimate == r0.estimate
+        # the idle stream's self-join batches alone after the mates moved,
+        # so its cohort entry is recomputed at most once; versions did not
+        # churn per flush
+        assert len(svc.engine._cache) <= cached + 3
+
+    def test_empty_submission_preserves_version_end_to_end(self):
+        """service.ingest of an empty batch followed by flush is a no-op
+        for the version even though submit() recorded a chunk."""
+        svc = self._build()
+        rng = np.random.default_rng(4)
+        svc.ingest("busy", _records(rng, 24, 4))
+        svc.flush()
+        win = svc.registry.stream("busy").window
+        v = win.version
+        svc.ingest("busy", np.zeros((0, 4), np.uint32))
+        svc.flush()
+        assert win.version == v
+
+    def test_equal_but_new_pytree_does_not_bump_version(self):
+        """absorb_delta's no-op check is leaf-identity based: re-wrapping
+        the unchanged leaves in a new state container must keep the
+        version (the regression: `is` on the container alone)."""
+        svc = self._build()
+        svc.ingest("busy", _records(np.random.default_rng(5), 24, 4))
+        svc.flush()
+        win = svc.registry.stream("busy").window
+        v = win.version
+        win.absorb_delta(type(win.total)(*win.total))   # new tuple, same leaves
+        assert win.version == v
+
+
+class TestWindowedSampleProvenance:
+    def test_total_tag_set_tracks_live_epochs_exactly(self):
+        """After W rotations with interleaved ingest, the sample window's
+        merged total must carry provenance tags of exactly the live
+        non-empty epochs -- no expired epoch survives the fold, and every
+        live epoch that kept data is represented."""
+        from repro import estimators as E
+        cfg = SJPCConfig(d=4, s=3, ratio=1.0, width=128, depth=2, seed=11)
+        svc = EstimationService(ServiceConfig(batch_rows=32,
+                                              window_epochs=3))
+        svc.create_group("g", cfg)
+        svc.create_stream(
+            "w", "g", estimator="reservoir",
+            estimator_cfg=E.ReservoirConfig(d=4, s=3, capacity=48, seed=2))
+        rng = np.random.default_rng(9)
+        win = svc.registry.stream("w").window
+        for epoch in range(7):
+            # interleaved ingest: two submissions + flushes per epoch
+            svc.ingest("w", _records(rng, 60, 4))
+            svc.flush()
+            svc.ingest("w", _records(rng, 60, 4))
+            svc.advance_epoch()
+            live_sids = {int(s.sid) for s in win._slots
+                         if s is not None and int(s.n) > 0}
+            tags = np.asarray(win.total.tags)
+            assert set(tags[tags >= 0].tolist()) == live_sids, epoch
+            # the window keeps exactly the last W epochs' provenance
+            assert live_sids == set(range(max(0, epoch - 1), epoch + 1))
