@@ -129,25 +129,42 @@ def service_table(res):
                    f"{float(speedup):.2f}x")
     q = svc.get("query")
     if isinstance(q, dict) and q:
-        out.append(
+        line = (
             f"\nsnapshot poll over {q.get('continuous_queries', '?')} "
             f"standing queries: "
             f"p50 {float(q.get('poll_p50_ms', 0)):.1f} ms, "
-            f"p95 {float(q.get('poll_p95_ms', 0)):.1f} ms "
-            f"({float(q.get('per_query_p50_ms', 0)):.2f} ms/query)")
+            f"p95 {float(q.get('poll_p95_ms', 0)):.1f} ms")
+        if q.get("poll_p99_ms") is not None:
+            line += f", p99 {float(q['poll_p99_ms']):.1f} ms"
+        line += f" ({float(q.get('per_query_p50_ms', 0)):.2f} ms/query)"
+        out.append(line)
+        obs_bits = []
+        if q.get("cache_hit_rate") is not None:
+            obs_bits.append("steady-state cache hit rate "
+                            f"{float(q['cache_hit_rate']):.2f}")
+        if q.get("queue_depth_peak") is not None:
+            obs_bits.append("ingest queue-depth peak "
+                            f"{float(q['queue_depth_peak']):.0f} rows")
+        if q.get("trace_events"):
+            obs_bits.append(f"{int(q['trace_events'])} trace events "
+                            "(benchmarks/out/trace.jsonl)")
+        if obs_bits:
+            out.append("observability: " + ", ".join(obs_bits))
     snap = sorted(((key, row) for key, row in svc.items()
                    if key.startswith("snapshot_") and isinstance(row, dict)),
                   key=lambda kv: (int(kv[1].get("streams", 0)), kv[0]))
     if snap:
         out.append("\n| snapshot row (all thresholds) | streams | cells "
-                   "| p50 ms | p95 ms |")
-        out.append("|---|---|---|---|---|")
+                   "| p50 ms | p95 ms | p99 ms |")
+        out.append("|---|---|---|---|---|---|")
         for key, row in snap:
+            p99 = row.get("p99_ms")
             out.append(
                 f"| {key} | {row.get('streams', '-')} "
                 f"| {row.get('cells', '-')} "
                 f"| {float(row.get('p50_ms', 0)):.2f} "
-                f"| {float(row.get('p95_ms', 0)):.2f} |")
+                f"| {float(row.get('p95_ms', 0)):.2f} "
+                + (f"| {float(p99):.2f} |" if p99 is not None else "| - |"))
     for key, label in (
             ("speedup_fused_query_16s",
              "fused batched query (steady state) vs per-stream reference"),

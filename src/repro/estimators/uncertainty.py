@@ -49,6 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import default_registry
+
 DEFAULT_REPLICATES = 32     # bootstrap resamples B
 DEFAULT_ITEM_CAP = 256      # m-out-of-m cap b per replicate
 
@@ -161,6 +163,10 @@ def bootstrap_pair_stderr(items, valid, n, *, keys, s: int,
                    np.float64)
     if replicates < 2 or R < 2:
         return np.zeros((N, L))
+    reg = default_registry()
+    if reg.enabled:
+        reg.inc("bootstrap_replicates_total", N * replicates,
+                method="bootstrap")
     idx, rep_valid, b_sizes = resample_valid_slots(
         keys, valid, replicates, item_cap)
     # gather replicate items on device; ONE fused launch over the stacked
@@ -226,6 +232,10 @@ def stratified_bootstrap_stderr(same_sim, same_valid, same_seen,
         raise ValueError("stratified bootstrap needs >= 2 replicates")
     levels = np.arange(d + 1)
     N = same_pairs.shape[0]
+    reg = default_registry()
+    if reg.enabled:
+        reg.inc("bootstrap_replicates_total", N * replicates,
+                method="bootstrap_stratified")
     n_i = np.asarray(n, np.int64).reshape(N)
     step_i = np.asarray(step, np.int64).reshape(N)
     seen_s = np.asarray(same_seen, np.float64).reshape(N)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sketch import SketchParams
+from repro.obs.metrics import default_registry
 from . import ref
 from .fingerprint import fingerprint_pallas
 from .fused_ingest import fused_ingest_pallas
@@ -27,11 +28,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _count(kernel: str, use_pallas: bool) -> None:
+    """``kernel_dispatch_total{kernel, path}`` in the process-global
+    registry: which path (pallas vs jnp reference) each entry point
+    resolved to.  Calls under an enclosing jit count once per *trace*,
+    not per execution -- the number answers "which kernels compiled,
+    via which path", the dispatch-shape question DESIGN.md §15.3 cares
+    about."""
+    reg = default_registry()
+    if reg.enabled:
+        reg.inc("kernel_dispatch_total", kernel=kernel,
+                path="pallas" if use_pallas else "jnp")
+
+
 def fingerprint(values, combo_masks, combo_ids, bases, *, use_pallas=None,
                 interpret=None):
     """(B, d) records -> two (B, M) sub-value fingerprints."""
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("fingerprint", use_pallas)
     if not use_pallas:
         return ref.fingerprint_ref(values, combo_masks, combo_ids, bases)
     interpret = (not _on_tpu()) if interpret is None else interpret
@@ -46,6 +61,7 @@ def sketch_update(counters, fp1, fp2, params: SketchParams, weights,
         weights = jnp.ones(fp1.reshape(-1).shape, jnp.int32)
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("sketch_update", use_pallas)
     if not use_pallas:
         return ref.sketch_update_ref(counters, fp1, fp2,
                                      params.bucket_coeffs, params.sign_coeffs,
@@ -63,6 +79,7 @@ def sketch_moments(counters_a, counters_b=None, *, use_pallas=None,
         counters_b = counters_a
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("sketch_moments", use_pallas)
     if not use_pallas:
         return ref.sketch_moments_ref(counters_a, counters_b)
     interpret = (not _on_tpu()) if interpret is None else interpret
@@ -82,6 +99,7 @@ def fused_ingest(counters, values, masks, ids, bases, bucket_coeffs,
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("fused_ingest", use_pallas)
     if not use_pallas:
         return ref.fused_ingest_ref(counters, values, masks, ids, bases,
                                     bucket_coeffs, sign_coeffs, weights)
@@ -110,6 +128,7 @@ def fused_query(counters_a, counters_b=None, *, use_pallas=None,
         counters_b = counters_a
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("fused_query", use_pallas)
     if not use_pallas:
         return ref.fused_query_ref(counters_a, counters_b)
     interpret = (not _on_tpu()) if interpret is None else interpret
@@ -143,6 +162,7 @@ def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
     valid = valid.reshape((-1, R))
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("fused_pairs", use_pallas)
     if not use_pallas:
         out = ref.fused_pairs_ref(items, valid)
     else:
@@ -170,6 +190,7 @@ def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
+    _count("flash_attention", use_pallas)
     if not use_pallas:
         from repro.models.attention import chunked_attention
         return chunked_attention(q, k, v, causal=causal,

@@ -71,6 +71,11 @@ class MonitorServiceClient:
         return self.service.snapshot([self.stream]).all_thresholds(
             self.stream, clamp=clamp)
 
+    def metrics_report(self) -> str:
+        """The owning service's Prometheus text dump (DESIGN.md §15) --
+        the training driver scrapes its monitor tenant like any other."""
+        return self.service.metrics_report()
+
     def log_entry(self, step: int) -> dict:
         """A flat dict for the driver's sketch log: g_k +/- stderr per k."""
         res = self.query()

@@ -55,6 +55,7 @@ from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCParams, SJPCState
 from repro.estimators import index_state, stack_states
 from repro.kernels.ops import make_sjpc_update_fn
+from repro.obs import Observability
 
 from .registry import HashGroup, StreamEntry
 
@@ -169,7 +170,8 @@ class IngestPipeline:
 
     def __init__(self, group: HashGroup, *, batch_rows: int = 256,
                  use_pallas: bool | None = None, interpret: bool | None = None,
-                 use_fused: bool = True, shards: int = 1):
+                 use_fused: bool = True, shards: int = 1,
+                 obs: Observability | None = None):
         assert batch_rows >= 1 and shards >= 1
         assert batch_rows % shards == 0, \
             f"batch_rows={batch_rows} must be divisible by shards={shards}"
@@ -179,7 +181,9 @@ class IngestPipeline:
         self.interpret = interpret
         self.use_fused = use_fused
         self.shards = shards
+        self.obs = obs if obs is not None else Observability.disabled()
         self._front: dict[str, list[np.ndarray]] = {}
+        self._front_rows = 0                 # queue depth, kept incrementally
         self._back: dict[str, list[np.ndarray]] = {}
         self.stats = {"submitted_records": 0, "flushes": 0, "rounds": 0,
                       "dispatches": 0, "padded_rows": 0, "dispatch_rows": 0}
@@ -192,11 +196,19 @@ class IngestPipeline:
             raise ValueError(
                 f"records must be (n, d={self.group.cfg.d}); got {records.shape}")
         self._front.setdefault(name, []).append(records)
+        self._front_rows += records.shape[0]
         self.stats["submitted_records"] += records.shape[0]
+        m = self.obs.metrics
+        if m.enabled:
+            gid = self.group.group_id
+            m.inc("ingest_submitted_records_total", records.shape[0],
+                  group=gid)
+            m.set("ingest_pending_rows", self._front_rows, group=gid)
+            m.set_max("ingest_pending_rows_peak", self._front_rows, group=gid)
         return records.shape[0]
 
     def pending_rows(self) -> int:
-        return sum(r.shape[0] for chunks in self._front.values() for r in chunks)
+        return self._front_rows
 
     # ------------------------------------------------------------------
     def flush(self, entries: list[StreamEntry]) -> dict:
@@ -215,10 +227,14 @@ class IngestPipeline:
         :func:`ingest_key`.
         """
         self._front, self._back = self._back, self._front
+        self._front_rows = 0
         pending = {name: (np.concatenate(chunks) if chunks else
                           np.zeros((0, self.group.cfg.d), np.uint32))
                    for name, chunks in self._back.items()}
         self._back = {}
+        if self.obs.metrics.enabled:
+            self.obs.metrics.set("ingest_pending_rows", 0,
+                                 group=self.group.group_id)
 
         entries = sorted(entries, key=lambda e: e.uid)
         out = {e.name: e.window.ingest_base() for e in entries}
@@ -265,16 +281,32 @@ class IngestPipeline:
                 e.flushes += rounds
                 e.records += int(rows.shape[0])
 
-        keys = ingest_key_grid(
-            jnp.uint32(est.ingest_seed),
-            jnp.asarray([e.uid for e in entries], jnp.int32),
-            jnp.asarray(round_idx))
-        states = stack_states([out[e.name] for e in entries])
-        states = est.ingest_rounds(states, jnp.asarray(values),
-                                   jnp.asarray(mask), keys)
+        gid, kind = self.group.group_id, entries[0].estimator_kind
+        with self.obs.span("ingest.flush_cohort",
+                           histogram="ingest_flush_seconds",
+                           labels={"group": gid, "kind": kind},
+                           group=gid, kind=kind, streams=S,
+                           rounds=rounds) as sp:
+            keys = ingest_key_grid(
+                jnp.uint32(est.ingest_seed),
+                jnp.asarray([e.uid for e in entries], jnp.int32),
+                jnp.asarray(round_idx))
+            states = stack_states([out[e.name] for e in entries])
+            states = est.ingest_rounds(states, jnp.asarray(values),
+                                       jnp.asarray(mask), keys)
+            # device-time semantics: the span blocks on the dispatched
+            # states before its clock stops (trace events show dispatch
+            # vs compute separately)
+            sp.sync(*jax.tree_util.tree_leaves(states))
         self.stats["rounds"] += rounds
         self.stats["dispatches"] += 1
         self.stats["dispatch_rows"] += S * B * rounds
+        m = self.obs.metrics
+        if m.enabled:
+            m.inc("ingest_dispatches_total", group=gid, kind=kind)
+            m.inc("ingest_rounds_total", rounds, group=gid, kind=kind)
+            m.inc("ingest_dispatch_rows_total", S * B * rounds,
+                  group=gid, kind=kind)
         for i, e in enumerate(entries):
             if pending.get(e.name, _EMPTY).shape[0]:
                 out[e.name] = index_state(states, i)

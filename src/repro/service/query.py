@@ -42,6 +42,7 @@ import jax
 
 from repro.core.sjpc import SJPCConfig
 from repro.estimators import Estimator, stack_states
+from repro.obs import Observability
 
 from .registry import StreamRegistry
 
@@ -101,7 +102,8 @@ class Snapshot:
                  use_fused_query: bool = True,
                  use_pallas: bool | None = None,
                  interpret: bool | None = None,
-                 cache: dict | None = None):
+                 cache: dict | None = None,
+                 obs: Observability | None = None):
         self._views = views
         self._registry = registry
         self._use_fused = use_fused_query
@@ -109,6 +111,18 @@ class Snapshot:
         self._interpret = interpret
         self._cache = {} if cache is None else cache
         self._local: dict = {}     # per-snapshot memo of shared-cache hits
+        self._obs = obs if obs is not None else Observability.disabled()
+
+    def _count_cache(self, hit: bool, group: str, kind: str, op: str) -> None:
+        """Version-keyed cache accounting: a *miss* is a serve that had to
+        recompute; everything else -- per-snapshot memo hits, shared-cache
+        hits across snapshots, idle ride-along tenants whose versions kept
+        a cohort key stable -- is a *hit*."""
+        m = self._obs.metrics
+        if m.enabled:
+            m.inc("query_cache_hits_total" if hit
+                  else "query_cache_misses_total",
+                  group=group, kind=kind, op=op)
 
     def _view(self, name: str) -> _StreamView:
         if name not in self._views:
@@ -137,14 +151,24 @@ class Snapshot:
         group_id, eid = view.group_id, id(view.estimator)
         local_key = (group_id, eid, view.shape_sig, clamp)
         if local_key in self._local:
+            self._count_cache(True, group_id, view.kind, "self")
             return self._local[local_key]
         views = self._cohort_views(group_id, eid, view.shape_sig)
         key = ("self", group_id, views[0].kind, clamp,
                tuple((v.name, v.version) for v in views))
-        if key not in self._cache:
-            est = views[0].estimator.estimate_batch(
-                stack_states([v.state for v in views]), clamp=clamp,
-                use_pallas=self._use_pallas, interpret=self._interpret)
+        hit = key in self._cache
+        self._count_cache(hit, group_id, views[0].kind, "self")
+        if not hit:
+            with self._obs.span("query.self_batch",
+                                histogram="query_batch_seconds",
+                                labels={"group": group_id,
+                                        "kind": views[0].kind, "op": "self"},
+                                group=group_id, kind=views[0].kind,
+                                streams=len(views)) as sp:
+                est = views[0].estimator.estimate_batch(
+                    stack_states([v.state for v in views]), clamp=clamp,
+                    use_pallas=self._use_pallas, interpret=self._interpret)
+                sp.sync(*jax.tree_util.tree_leaves(est))
             self._cache[key] = ({v.name: i for i, v in enumerate(views)}, est)
         self._local[local_key] = self._cache[key]
         return self._local[local_key]
@@ -154,11 +178,17 @@ class Snapshot:
         filling the per-pair cache entries ``prefetch``/``join`` read."""
         views_a = [self._view(a) for a, _ in pairs]
         views_b = [self._view(b) for _, b in pairs]
-        est = views_a[0].estimator.estimate_join_batch(
-            stack_states([v.state for v in views_a]),
-            stack_states([v.state for v in views_b]),
-            clamp=clamp, use_pallas=self._use_pallas,
-            interpret=self._interpret)
+        gid, kind = views_a[0].group_id, views_a[0].kind
+        with self._obs.span("query.join_batch",
+                            histogram="query_batch_seconds",
+                            labels={"group": gid, "kind": kind, "op": "join"},
+                            group=gid, kind=kind, pairs=len(pairs)) as sp:
+            est = views_a[0].estimator.estimate_join_batch(
+                stack_states([v.state for v in views_a]),
+                stack_states([v.state for v in views_b]),
+                clamp=clamp, use_pallas=self._use_pallas,
+                interpret=self._interpret)
+            sp.sync(*jax.tree_util.tree_leaves(est))
         for i, (va, vb) in enumerate(zip(views_a, views_b)):
             k = ("join", va.name, va.version, vb.name, vb.version, clamp)
             # slice array fields to the pair's row; scalar metadata
@@ -172,6 +202,9 @@ class Snapshot:
         per group with join pairs (instead of one call per query)."""
         if not self._use_fused:
             return
+        m = self._obs.metrics
+        if m.enabled and queries:
+            m.inc("query_prefetch_queries_total", value=float(len(queries)))
         join_pairs: dict[str, list[tuple[str, str]]] = {}
         for q in queries:
             if q.kind == "join":
@@ -183,8 +216,12 @@ class Snapshot:
                     join_pairs.setdefault(va.group_id, []).append((a, b))
             else:
                 self._self_batch(self._view(q.streams[0]), clamp)
-        for pairs in join_pairs.values():
-            self._join_batch(sorted(set(pairs)), clamp)
+        for gid, pairs in join_pairs.items():
+            pairs = sorted(set(pairs))
+            if m.enabled:
+                m.inc("query_prefetch_join_pairs_total",
+                      value=float(len(pairs)), group=gid)
+            self._join_batch(pairs, clamp)
 
     # -- per-stream reference oracle -----------------------------------
     def _ref_table(self, name: str, clamp: bool):
@@ -192,7 +229,9 @@ class Snapshot:
         float64 inversion -- the PR 1 path), memoized by window version."""
         v = self._view(name)
         key = ("ref", name, v.version, clamp)
-        if key not in self._cache:
+        hit = key in self._cache
+        self._count_cache(hit, v.group_id, v.kind, "ref")
+        if not hit:
             self._cache[key] = v.estimator.estimate_ref(v.state, clamp=clamp)
         return self._cache[key]
 
@@ -230,12 +269,16 @@ class Snapshot:
         li = s - cfg.s
         if self._use_fused:
             k = ("join", a, va.version, b, vb.version, clamp)
-            if k not in self._cache:
+            hit = k in self._cache
+            self._count_cache(hit, va.group_id, va.kind, "join")
+            if not hit:
                 self._join_batch([(a, b)], clamp)
             est = self._cache[k]
         else:
             k = ("join_ref", a, va.version, b, vb.version, clamp)
-            if k not in self._cache:
+            hit = k in self._cache
+            self._count_cache(hit, va.group_id, va.kind, "join")
+            if not hit:
                 self._cache[k] = va.estimator.estimate_join_ref(
                     va.state, vb.state, clamp=clamp)
             est = self._cache[k]
@@ -278,31 +321,39 @@ class QueryEngine:
     def __init__(self, registry: StreamRegistry, *,
                  use_fused_query: bool = True,
                  use_pallas: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 obs: Observability | None = None):
         self._registry = registry
         self.use_fused_query = use_fused_query
         self.use_pallas = use_pallas
         self.interpret = interpret
         self._cache: dict = {}
+        self.obs = obs if obs is not None else Observability.disabled()
 
     def snapshot(self, names: list[str] | None = None) -> Snapshot:
         entries = (self._registry.streams() if names is None
                    else [self._registry.stream(n) for n in names])
         if len(self._cache) > _CACHE_MAX_ENTRIES:
             self._cache.clear()
-        views = {}
-        for e in entries:
-            st = e.window.window_state()
-            views[e.name] = _StreamView(
-                name=e.name, cfg=self._registry.group(e.group_id).cfg,
-                state=st, estimator=e.estimator, kind=e.estimator_kind,
-                n=e.window.n_live(),
-                live_epochs=e.window.live_epochs,
-                window_epochs=e.window.window_epochs,
-                group_id=e.group_id, version=e.window.version,
-                shape_sig=tuple(tuple(np.shape(leaf)) for leaf in
-                                jax.tree_util.tree_leaves(st)))
+            self.obs.metrics.inc("query_cache_evictions_total")
+        with self.obs.span("query.snapshot",
+                           histogram="query_snapshot_seconds",
+                           streams=len(entries)):
+            views = {}
+            for e in entries:
+                st = e.window.window_state()
+                views[e.name] = _StreamView(
+                    name=e.name, cfg=self._registry.group(e.group_id).cfg,
+                    state=st, estimator=e.estimator, kind=e.estimator_kind,
+                    n=e.window.n_live(),
+                    live_epochs=e.window.live_epochs,
+                    window_epochs=e.window.window_epochs,
+                    group_id=e.group_id, version=e.window.version,
+                    shape_sig=tuple(tuple(np.shape(leaf)) for leaf in
+                                    jax.tree_util.tree_leaves(st)))
+        if self.obs.metrics.enabled:
+            self.obs.metrics.set("query_cache_entries", float(len(self._cache)))
         return Snapshot(views, self._registry,
                         use_fused_query=self.use_fused_query,
                         use_pallas=self.use_pallas, interpret=self.interpret,
-                        cache=self._cache)
+                        cache=self._cache, obs=self.obs)

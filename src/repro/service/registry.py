@@ -28,6 +28,8 @@ from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCParams
 from repro.estimators import Estimator
 
+from repro.obs import Observability
+
 from .window import WindowedSketch
 
 
@@ -76,7 +78,8 @@ class StreamEntry:
 
 
 class StreamRegistry:
-    def __init__(self):
+    def __init__(self, obs: Observability | None = None):
+        self.obs = obs if obs is not None else Observability.disabled()
         self._groups: dict[str, HashGroup] = {}
         self._streams: dict[str, StreamEntry] = {}
         self._next_uid = 0
@@ -104,7 +107,8 @@ class StreamRegistry:
         entry = StreamEntry(
             name=name, group_id=group_id, uid=self._next_uid,
             window=WindowedSketch(est, est.init(sid=0), window_epochs,
-                                  backing_epochs=backing_epochs),
+                                  backing_epochs=backing_epochs,
+                                  obs=self.obs, name=name),
             estimator_kind=estimator)
         self._next_uid += 1
         self._streams[name] = entry

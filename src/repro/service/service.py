@@ -27,7 +27,11 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
+
 from repro.core.sjpc import SJPCConfig, SJPCState
+from repro.obs import (AccuracyAuditor, Observability, Tracer,
+                       default_registry, default_tracer)
 
 from .ingest import IngestPipeline
 from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
@@ -54,20 +58,51 @@ class ServiceConfig:
     backing_epochs: int = 0          # default sample-window refill depth K
                                      # (DESIGN.md §14.2; per-stream override
                                      # at create_stream; sample kinds only)
+    observe: bool = True             # metrics + spans (DESIGN.md §15); False =
+                                     # shared no-op bundle, reference-speed paths
+    audit_rate: float = 0.0          # sampled exact-replay accuracy telemetry
+                                     # (0 = off; 1 = audit every polled query)
+    audit_max_records: int = 65536   # audit skip threshold (exact oracle cost)
+    trace_sink: object = None        # JSON-lines span sink: path or file-like
+    trace_annotate: bool = False     # bracket spans in jax.profiler annotations
 
 
 class EstimationService:
-    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+    def __init__(self, cfg: ServiceConfig = ServiceConfig(), *,
+                 obs: Observability | None = None):
         self.cfg = cfg
-        self.registry = StreamRegistry()
+        if obs is None:
+            obs = self._build_obs(cfg)
+        if cfg.audit_rate > 0.0 and obs.auditor is None:
+            obs = dataclasses.replace(obs, auditor=AccuracyAuditor(
+                obs.metrics, rate=cfg.audit_rate,
+                max_records=cfg.audit_max_records))
+        self.obs = obs
+        self.registry = StreamRegistry(obs=self.obs)
         self.engine = QueryEngine(self.registry,
                                   use_fused_query=cfg.use_fused_query,
                                   use_pallas=cfg.use_pallas,
-                                  interpret=cfg.interpret)
+                                  interpret=cfg.interpret,
+                                  obs=self.obs)
         self._pipelines: dict[str, IngestPipeline] = {}
         self._continuous: dict[str, ContinuousQuery] = {}
         self.stats = {"ingested_records": 0, "flush_s": 0.0, "epochs": 0,
                       "snapshots": 0, "polls": 0}
+
+    @staticmethod
+    def _build_obs(cfg: ServiceConfig) -> Observability:
+        """Default bundle: the process-global registry/tracer, a private
+        tracer only when the config asks for a sink or profiler
+        annotations (so two services never interleave one file)."""
+        if not cfg.observe:
+            return Observability.disabled()
+        metrics = default_registry()
+        if cfg.trace_sink is not None or cfg.trace_annotate:
+            tracer = Tracer(sink=cfg.trace_sink, annotate=cfg.trace_annotate,
+                            registry=metrics)
+        else:
+            tracer = default_tracer()
+        return Observability(metrics=metrics, tracer=tracer)
 
     # -- provisioning ---------------------------------------------------
     def create_group(self, group_id: str, cfg: SJPCConfig) -> HashGroup:
@@ -84,7 +119,8 @@ class EstimationService:
         self._pipelines[group_id] = IngestPipeline(
             group, batch_rows=self.cfg.batch_rows,
             use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
-            use_fused=self.cfg.use_fused, shards=self.cfg.shards)
+            use_fused=self.cfg.use_fused, shards=self.cfg.shards,
+            obs=self.obs)
         return group
 
     def create_stream(self, name: str, group_id: str,
@@ -113,9 +149,15 @@ class EstimationService:
                 backing = 0
         else:
             backing = backing_epochs
-        return self.registry.register(
+        entry = self.registry.register(
             name, group_id, window_epochs, estimator=kind,
             estimator_cfg=estimator_cfg, backing_epochs=backing)
+        if self.obs.metrics.enabled:
+            self.obs.metrics.set("estimator_memory_bytes",
+                                 float(entry.window.memory_bytes()),
+                                 stream=name, kind=kind)
+            entry.window._export_gauges()
+        return entry
 
     # -- ingest ---------------------------------------------------------
     def ingest(self, name: str, records) -> int:
@@ -124,6 +166,9 @@ class EstimationService:
         pipe = self._pipelines[entry.group_id]
         n = pipe.submit(name, records)
         self.stats["ingested_records"] += n
+        if self.obs.auditor is not None:
+            self.obs.auditor.record(name, records,
+                                    entry.window.window_epochs)
         if (self.cfg.auto_flush_rows is not None
                 and pipe.pending_rows() >= self.cfg.auto_flush_rows):
             self._flush_group(entry.group_id)
@@ -143,15 +188,27 @@ class EstimationService:
                 f"{entry.estimator_kind!r}; external state deltas need a "
                 "linear (mergeable-by-arithmetic) estimator")
         entry.window.absorb_delta(est.merge(entry.window.ingest_base(), delta))
+        if self.obs.auditor is not None:
+            self.obs.auditor.mark_unauditable(name)
+        self.obs.metrics.inc("ingest_state_deltas_total", stream=name)
 
     def _flush_group(self, group_id: str) -> None:
-        t0 = time.perf_counter()
         pipe = self._pipelines[group_id]
         entries = self.registry.streams(group_id)
-        new_states = pipe.flush(entries)
-        for e in entries:
-            e.window.absorb_delta(new_states[e.name])
-        self.stats["flush_s"] += time.perf_counter() - t0
+        with self.obs.span("service.flush", histogram="service_flush_seconds",
+                           labels={"group": group_id},
+                           group=group_id, streams=len(entries)):
+            t0 = time.perf_counter()
+            new_states = pipe.flush(entries)
+            for e in entries:
+                e.window.absorb_delta(new_states[e.name])
+            # jax dispatch is asynchronous: without blocking on the
+            # committed windows this timed the *enqueue* and reported
+            # near-zero.  flush_s is device-inclusive wall time, obs on
+            # or off (the span's histogram inherits the same interval)
+            jax.block_until_ready(
+                [jax.tree_util.tree_leaves(e.window.total) for e in entries])
+            self.stats["flush_s"] += time.perf_counter() - t0
 
     def flush(self) -> None:
         """Drain every group's ingest buffer into the windows."""
@@ -167,7 +224,10 @@ class EstimationService:
                    else [self.registry.stream(name)])
         for e in entries:
             e.window.advance_epoch()
+            if self.obs.auditor is not None:
+                self.obs.auditor.advance_epoch(e.name)
         self.stats["epochs"] += 1
+        self.obs.metrics.inc("service_epochs_total")
 
     # -- queries --------------------------------------------------------
     def snapshot(self, names: list[str] | None = None) -> Snapshot:
@@ -195,10 +255,18 @@ class EstimationService:
         ``estimate_join_batch`` -- the individual ``evaluate`` calls below
         are then pure cache lookups.
         """
-        snap = self.snapshot()
-        snap.prefetch(self._continuous.values())
-        self.stats["polls"] += 1
-        return {name: q.evaluate(snap) for name, q in self._continuous.items()}
+        with self.obs.span("service.poll", histogram="service_poll_seconds",
+                           queries=len(self._continuous)):
+            snap = self.snapshot()
+            snap.prefetch(self._continuous.values())
+            self.stats["polls"] += 1
+            out = {name: q.evaluate(snap)
+                   for name, q in self._continuous.items()}
+        if self.obs.auditor is not None:
+            for q in self._continuous.values():
+                kind = self.registry.stream(q.streams[0]).estimator_kind
+                self.obs.auditor.maybe_audit(out[q.name], kind)
+        return out
 
     # -- introspection --------------------------------------------------
     def describe(self) -> dict:
@@ -217,3 +285,32 @@ class EstimationService:
             }
         return {"groups": groups, "continuous": list(self._continuous),
                 **self.stats}
+
+    def refresh_gauges(self) -> None:
+        """Recompute the derived / point-in-time gauges (memory bytes,
+        window geometry, queue depth, per-(group, kind) cache hit
+        ratios) so an export reflects *now*, not the last mutation."""
+        m = self.obs.metrics
+        if not m.enabled:
+            return
+        for e in self.registry.streams():
+            m.set("estimator_memory_bytes", float(e.window.memory_bytes()),
+                  stream=e.name, kind=e.estimator_kind)
+            e.window._export_gauges()
+        for group_id, pipe in self._pipelines.items():
+            m.set("ingest_pending_rows", float(pipe.pending_rows()),
+                  group=group_id)
+        hits = m.series("query_cache_hits_total")
+        misses = m.series("query_cache_misses_total")
+        for key in sorted(set(hits) | set(misses)):
+            h, miss = hits.get(key, 0.0), misses.get(key, 0.0)
+            if h + miss > 0:
+                m.set("query_cache_hit_ratio", h / (h + miss),
+                      **dict(key))
+
+    def metrics_report(self) -> str:
+        """The service's metric state in the Prometheus text exposition
+        format (derived gauges refreshed first).  ``obs.metrics.collect()``
+        is the plain-dict equivalent for programmatic readers."""
+        self.refresh_gauges()
+        return self.obs.metrics.to_prometheus()

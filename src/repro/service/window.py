@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.estimators import Estimator, index_state
+from repro.obs import Observability
 
 
 class WindowedSketch:
@@ -65,8 +66,11 @@ class WindowedSketch:
 
     def __init__(self, estimator: Estimator, init_state,
                  window_epochs: int | None = None,
-                 backing_epochs: int = 0):
+                 backing_epochs: int = 0,
+                 obs: Observability | None = None, name: str = ""):
         assert window_epochs is None or window_epochs >= 1
+        self.obs = obs if obs is not None else Observability.disabled()
+        self.name = name                     # metric label (stream name)
         self.estimator = estimator
         self.cfg = getattr(estimator, "cfg", None)
         self.window_epochs = window_epochs
@@ -149,6 +153,8 @@ class WindowedSketch:
         refills the expanded total from the data the slots kept -- so an
         expiry no longer shrinks the served sample to 1/W of what the
         window retains (DESIGN.md §14.2)."""
+        self.obs.metrics.inc("window_refolds_total", stream=self.name,
+                             refill=str(bool(self.backing_epochs)))
         live = [s for s in self._slots if s is not None]
         K = self.backing_epochs
         if K and len(live) == 1:
@@ -172,24 +178,47 @@ class WindowedSketch:
         expiring = self._live >= self.window_epochs
         if not expiring:
             self._live += 1
-        if self.estimator.linear:
+        with self.obs.span("window.rotate",
+                           histogram="window_rotate_seconds",
+                           labels={"stream": self.name},
+                           stream=self.name, expiring=expiring) as sp:
+            if self.estimator.linear:
+                if expiring:
+                    # the slot we are about to reuse holds the expiring
+                    # epoch; version bumps only here -- a rotation that
+                    # leaves ``total`` untouched must not invalidate
+                    # version-keyed query caches
+                    expired = self._with_total_step(
+                        index_state(self._ring, self._pos))
+                    self.total = self.estimator.subtract(self.total, expired)
+                    self.version += 1
+                self._ring = jax.tree_util.tree_map(
+                    lambda ring: ring.at[self._pos].set(
+                        jnp.zeros_like(ring[self._pos])), self._ring)
+            else:
+                self._slots[self._pos] = self.estimator.init(sid=self.epoch)
+                if expiring:
+                    self._refold()
+                    self.version += 1
+            sp.sync(*jax.tree_util.tree_leaves(self.total))
+        m = self.obs.metrics
+        if m.enabled:
+            m.inc("window_rotations_total", stream=self.name)
             if expiring:
-                # the slot we are about to reuse holds the expiring epoch;
-                # version bumps only here -- a rotation that leaves
-                # ``total`` untouched must not invalidate version-keyed
-                # query caches
-                expired = self._with_total_step(
-                    index_state(self._ring, self._pos))
-                self.total = self.estimator.subtract(self.total, expired)
-                self.version += 1
-            self._ring = jax.tree_util.tree_map(
-                lambda ring: ring.at[self._pos].set(
-                    jnp.zeros_like(ring[self._pos])), self._ring)
-        else:
-            self._slots[self._pos] = self.estimator.init(sid=self.epoch)
-            if expiring:
-                self._refold()
-                self.version += 1
+                m.inc("window_expirations_total", stream=self.name)
+            self._export_gauges()
+
+    def _export_gauges(self) -> None:
+        """Refresh the per-stream window gauges (live ring slots, version,
+        refill depth) -- called on rotation and by metrics_report()."""
+        m = self.obs.metrics
+        if not m.enabled:
+            return
+        m.set("window_live_epochs", self.live_epochs, stream=self.name)
+        m.set("window_version", self.version, stream=self.name)
+        if self.backing_epochs:
+            m.set("window_backing_epochs", self.backing_epochs,
+                  stream=self.name)
 
     def _with_total_step(self, state):
         """Epoch deltas carry no meaningful PRNG position: expiry removes
