@@ -176,6 +176,35 @@ def service_table(res):
     return "\n".join(out)
 
 
+def planner_table(res):
+    """The `planner` suite: poll latency vs standing-query count, planner
+    on (cross-group fusion + plan cache) vs off (per-group prefetch).
+    Tolerant of missing rows; fixed (queries, planner) order so two
+    reports diff cleanly."""
+    pl = res.get("planner")
+    if not isinstance(pl, dict) or not pl:
+        return ""
+    rows = sorted(
+        ((key, row) for key, row in pl.items()
+         if key.startswith("poll_") and isinstance(row, dict)),
+        key=lambda kv: (int(kv[1].get("queries", 0)),
+                        not kv[1].get("planner", False)))
+    out = ["#### Planner — poll latency vs standing-query count\n",
+           "| row | planner | queries | streams | p50 ms | p95 ms |",
+           "|---|---|---|---|---|---|"]
+    for key, row in rows:
+        out.append(
+            f"| {key} | {'on' if row.get('planner') else 'off'} "
+            f"| {row.get('queries', '-')} | {row.get('streams', '-')} "
+            f"| {float(row.get('p50_ms', 0)):.2f} "
+            f"| {float(row.get('p95_ms', 0)):.2f} |")
+    ratio = pl.get("p95_ratio_1000q_vs_10q")
+    if ratio is not None:
+        out.append(f"\np95(1000 queries) / p95(10 queries), planner on: "
+                   f"{float(ratio):.2f}x (CI guard <= 3x)")
+    return "\n".join(out)
+
+
 def equal_space_table(res):
     """The `equal_space` suite: every served estimator kind at derived
     (equal-space) budgets on the seeded planted-cluster stream -- the
@@ -260,6 +289,9 @@ def paper_tables(results_path):
     svc = service_table(res)
     if svc:
         out.append("\n" + svc)
+    pl = planner_table(res)
+    if pl:
+        out.append("\n" + pl)
     eq = equal_space_table(res)
     if eq:
         out.append("\n" + eq)

@@ -351,6 +351,77 @@ def _executor_rows():
     return out
 
 
+def bench_planner():
+    """Planner suite (DESIGN.md §16): poll latency at 10/100/1000 standing
+    queries over 8 hash groups x 8 streams (same derived config, so the
+    planner fuses all touched group cohorts into ONE estimate_batch
+    launch), planner on vs off, with one group's windows churned between
+    polls so a poll is never a pure cache walk.
+
+    The CI acceptance guard reads ``p95_ratio_1000q_vs_10q`` from
+    results.json and requires <= 3x: serving cost must scale with device
+    launches (bounded by fusion + the plan cache), not with query count.
+    """
+    from repro.core.sjpc import SJPCConfig
+    from repro.service import ContinuousQuery, EstimationService, ServiceConfig
+
+    cfg = SJPCConfig(d=6, s=4, ratio=0.5, width=512, depth=2, seed=7)
+    rng = np.random.default_rng(0)
+    groups, per_group = 8, 8
+    churn = rng.integers(0, 1000, size=(256, cfg.d), dtype=np.uint32)
+    out = {}
+    for n_queries in (10, 100, 1000):
+        for use_planner in (True, False):
+            svc = EstimationService(ServiceConfig(
+                batch_rows=256, window_epochs=None,
+                use_planner=use_planner))
+            names = []
+            for g in range(groups):
+                svc.create_group(f"g{g}", cfg)
+                for s in range(per_group):
+                    nm = f"g{g}/s{s}"
+                    svc.create_stream(nm, f"g{g}")
+                    names.append(nm)
+            for i in range(n_queries):
+                svc.register_continuous(ContinuousQuery(
+                    f"q{i}", "self_join", (names[i % len(names)],)))
+            for nm in names:
+                svc.ingest(nm, churn)
+            svc.flush()
+            # warmup: compile + build the plan, then one churned poll so
+            # the steady-state launch shape (just g0's cohort) is compiled
+            # before timing starts
+            svc.poll()
+            svc.ingest(names[0], churn)
+            svc.flush()
+            svc.poll()
+            lats = []
+            for _ in range(15):
+                # touch g0 (covered by every query count) so each measured
+                # poll recomputes that cohort -- steady-state serving with
+                # live ingest, not a pure cache walk
+                svc.ingest(names[0], churn)
+                svc.flush()
+                t0 = time.time()
+                svc.poll()
+                lats.append(time.time() - t0)
+            lats.sort()
+            tag = f"poll_{'on' if use_planner else 'off'}_{n_queries}q"
+            out[tag] = {
+                "queries": n_queries, "planner": use_planner,
+                "streams": len(names), "groups": groups,
+                "p50_ms": 1e3 * lats[len(lats) // 2],
+                "p95_ms": 1e3 * lats[int(len(lats) * 0.95)],
+            }
+            print(f"{tag:>16}: p50 {out[tag]['p50_ms']:7.2f}ms "
+                  f"p95 {out[tag]['p95_ms']:7.2f}ms")
+    out["p95_ratio_1000q_vs_10q"] = (out["poll_on_1000q"]["p95_ms"]
+                                     / out["poll_on_10q"]["p95_ms"])
+    print(f"p95(1000q)/p95(10q), planner on: "
+          f"{out['p95_ratio_1000q_vs_10q']:.2f}x (guard <= 3.0)")
+    return out
+
+
 def bench_equal_space():
     """The paper's Fig. 8 as a living benchmark (DESIGN.md §13.5): replay
     one seeded planted-cluster stream through ALL served estimator kinds
@@ -488,7 +559,8 @@ def main(argv):
     os.makedirs(OUT_DIR, exist_ok=True)
     from benchmarks import paper_benchmarks as PB
     names = argv or (list(PB.ALL)
-                     + ["kernels", "service", "equal_space", "roofline"])
+                     + ["kernels", "service", "planner", "equal_space",
+                        "roofline"])
     results_path = os.path.join(OUT_DIR, "results.json")
     # merge into prior results so a partial run (e.g. `run service`) never
     # drops the other suites' rows from the collated report
@@ -506,6 +578,8 @@ def main(argv):
             results[name] = bench_kernels()
         elif name == "service":
             results[name] = bench_service()
+        elif name == "planner":
+            results[name] = bench_planner()
         elif name == "equal_space":
             results[name] = bench_equal_space()
         elif name == "roofline":

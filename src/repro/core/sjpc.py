@@ -128,10 +128,17 @@ def update(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
         level_params = sk.SketchParams(params.bucket_coeffs[idx], params.sign_coeffs[idx])
         new_counters.append(update_fn(counters[idx], fp1, fp2, level_params, weights))
     n_new = jnp.float32(B) if row_mask is None else row_mask.sum().astype(jnp.float32)
+    # step counts rounds that CARRIED data: a fully-masked (padding-only)
+    # round is a content no-op and consumes no randomness, so it must not
+    # advance the replay/bootstrap coordinate either -- a stream riding
+    # along fully masked in a busy cohort stays bit-identical to a solo
+    # replay of its own record rounds (ingest.py's determinism contract)
+    step_inc = (jnp.int32(1) if row_mask is None
+                else (n_new > 0).astype(jnp.int32))
     return SJPCState(
         counters=jnp.stack(new_counters),
         n=state.n + n_new,
-        step=state.step + 1,
+        step=state.step + step_inc,
     )
 
 
@@ -212,7 +219,12 @@ def update_fused(cfg: SJPCConfig, params: SJPCParams, state: SJPCState, values,
                     .reshape(state.counters.shape))
 
     n_new = jnp.float32(B) if row_mask is None else row_mask.sum().astype(jnp.float32)
-    return SJPCState(counters=counters, n=state.n + n_new, step=state.step + 1)
+    # data-carrying rounds only (see `update`): padding-only rounds must not
+    # advance the replay coordinate
+    step_inc = (jnp.int32(1) if row_mask is None
+                else (n_new > 0).astype(jnp.int32))
+    return SJPCState(counters=counters, n=state.n + n_new,
+                     step=state.step + step_inc)
 
 
 def merge(a: SJPCState, b: SJPCState) -> SJPCState:

@@ -238,7 +238,9 @@ class LSHSSEstimator(Estimator):
             cross_sim=cross_sim, cross_tags=cross_tags,
             cross_seen=cross_seen,
             n=n_new, sid=state.sid,
-            step=state.step + 1)
+            # data-carrying rounds only (see reservoir._ingest_one): padding
+            # rounds must not advance the bootstrap/replay coordinate
+            step=state.step + (jnp.sum(mask) > 0).astype(jnp.int32))
 
     def ingest_rounds(self, states, values, row_mask, keys):
         return self._rounds_fn(states, jnp.asarray(values),

@@ -169,12 +169,17 @@ class ReservoirEstimator(Estimator):
         win, src, n_new = reservoir_accept(
             key, state.n, mask.astype(jnp.int32), self.cfg.capacity)
         taken = jnp.take(values, src, axis=0)
+        # step (the bootstrap_key coordinate) advances only on rounds that
+        # carried data: a fully-masked padding round is a content no-op and
+        # must leave the state -- bars included -- bit-identical to a solo
+        # replay without it (ingest.py's determinism contract)
+        carried = (jnp.sum(mask.astype(jnp.int32)) > 0).astype(jnp.int32)
         return ReservoirState(
             items=jnp.where(win[:, None], taken, state.items),
             tags=jnp.where(win, state.sid, state.tags),
             n=n_new,
             sid=state.sid,
-            step=state.step + 1)
+            step=state.step + carried)
 
     def ingest_rounds(self, states, values, row_mask, keys):
         return self._rounds_fn(states, jnp.asarray(values),

@@ -7,6 +7,7 @@ bars.  See DESIGN.md §10 for the architecture and invariants.
 from .client import MonitorServiceClient
 from .ingest import (IngestPipeline, ingest_key, ingest_key_grid,
                      multi_round_update, multi_stream_update)
+from .planner import PlannerConfig, QueryPlanner
 from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
 from .registry import HashGroup, StreamEntry, StreamRegistry
 from .service import EstimationService, ServiceConfig
@@ -14,8 +15,8 @@ from .window import WindowedSketch
 
 __all__ = [
     "ContinuousQuery", "EstimationService", "HashGroup", "IngestPipeline",
-    "MonitorServiceClient", "QueryEngine", "QueryResult", "ServiceConfig",
-    "Snapshot", "StreamEntry", "StreamRegistry", "WindowedSketch",
-    "ingest_key", "ingest_key_grid", "multi_round_update",
-    "multi_stream_update",
+    "MonitorServiceClient", "PlannerConfig", "QueryEngine", "QueryPlanner",
+    "QueryResult", "ServiceConfig", "Snapshot", "StreamEntry",
+    "StreamRegistry", "WindowedSketch", "ingest_key", "ingest_key_grid",
+    "multi_round_update", "multi_stream_update",
 ]

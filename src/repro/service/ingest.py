@@ -223,8 +223,10 @@ class IngestPipeline:
         per cohort for jit shape stability); streams with no remaining
         records ride along fully masked.  An all-SJPC group is exactly the
         PR 2 single-dispatch path, bit for bit.  ``entry.flushes`` counts
-        *rounds* consumed, and is the replay coordinate for
-        :func:`ingest_key`.
+        the rounds that carried the stream's OWN rows, and is the replay
+        coordinate for :func:`ingest_key` -- cohort rounds that existed only
+        for a busier cohort-mate are fully masked here, consume none of this
+        stream's randomness, and do not advance it.
         """
         self._front, self._back = self._back, self._front
         self._front_rows = 0
@@ -275,10 +277,16 @@ class IngestPipeline:
             # keys nor commit the ride-along state below: their window
             # content is unchanged, and committing the step-only bump
             # would spuriously bump the version and thrash version-keyed
-            # query caches
+            # query caches.  Each stream's replay coordinate advances only
+            # by the rounds that carried ITS rows (r_i = ceil(c_i / B)) --
+            # trailing rounds that exist only for a busier cohort-mate are
+            # fully masked for this stream, consume no randomness, and must
+            # not shift its key stream, or the window content would depend
+            # on co-tenants' backlog sizes and the offline replay contract
+            # (module docstring) would break
             round_idx[:, i] = e.flushes + np.arange(rounds)
             if rows.shape[0]:
-                e.flushes += rounds
+                e.flushes += -(-rows.shape[0] // B)
                 e.records += int(rows.shape[0])
 
         gid, kind = self.group.group_id, entries[0].estimator_kind

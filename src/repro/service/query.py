@@ -34,6 +34,7 @@ paper proves no join-specific bound; DESIGN.md §10.4).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import NamedTuple
 
@@ -46,7 +47,7 @@ from repro.obs import Observability
 
 from .registry import StreamRegistry
 
-_CACHE_MAX_ENTRIES = 4096      # shared-cache bound; cleared wholesale beyond
+_CACHE_MAX_ENTRIES = 4096      # shared-cache bound; LRU-evicted beyond
 
 
 class QueryResult(NamedTuple):
@@ -62,6 +63,8 @@ class QueryResult(NamedTuple):
     stderr_kind: str = "none"  # uncertainty method behind stderr:
     #   "analytic" (Thm 1/2 bounds), "bootstrap", "bootstrap_stratified",
     #   or "none" (no bars available; stderr is 0)
+    stale: bool = False        # True when admission control served the last
+    #   cached result instead of fresh device work (DESIGN.md §16.3)
 
     def ci(self, z: float = 1.96) -> tuple:
         """The +/- z-sigma confidence interval, floored at 0 (both g_s
@@ -129,6 +132,14 @@ class Snapshot:
             raise KeyError(f"stream {name!r} not in snapshot")
         return self._views[name]
 
+    def _cache_get(self, key):
+        """Shared-cache read that refreshes LRU recency (the engine evicts
+        least-recently-used entries, so every hit must count as use)."""
+        cache = self._cache
+        if isinstance(cache, collections.OrderedDict):
+            cache.move_to_end(key)
+        return cache[key]
+
     # -- fused batched path --------------------------------------------
     def _cohort_views(self, group_id: str, eid: int,
                       shape_sig: tuple) -> list[_StreamView]:
@@ -154,8 +165,7 @@ class Snapshot:
             self._count_cache(True, group_id, view.kind, "self")
             return self._local[local_key]
         views = self._cohort_views(group_id, eid, view.shape_sig)
-        key = ("self", group_id, views[0].kind, clamp,
-               tuple((v.name, v.version) for v in views))
+        key = self._self_key(views, clamp)
         hit = key in self._cache
         self._count_cache(hit, group_id, views[0].kind, "self")
         if not hit:
@@ -170,8 +180,54 @@ class Snapshot:
                     use_pallas=self._use_pallas, interpret=self._interpret)
                 sp.sync(*jax.tree_util.tree_leaves(est))
             self._cache[key] = ({v.name: i for i, v in enumerate(views)}, est)
-        self._local[local_key] = self._cache[key]
+        self._local[local_key] = self._cache_get(key)
         return self._local[local_key]
+
+    @staticmethod
+    def _self_key(views: list[_StreamView], clamp: bool) -> tuple:
+        """The shared-cache key of one group cohort's batched self table."""
+        return ("self", views[0].group_id, views[0].kind, clamp,
+                tuple((v.name, v.version) for v in views))
+
+    def fused_self_batch(self, cohorts: list[list[_StreamView]],
+                         clamp: bool = True) -> int:
+        """ONE ``estimate_batch`` launch answering several group cohorts at
+        once (the planner's cross-group fusion, DESIGN.md §16.1).  Every
+        cohort must share the fusion signature -- same estimator kind,
+        derived config, and state shapes -- so their states stack along one
+        stream axis; the result unstacks back into the per-cohort cache
+        entries ``_self_batch`` reads, byte-for-byte the entries the
+        unfused path would have written (row slices of one batch).
+        """
+        todo = [c for c in cohorts if self._self_key(c, clamp)
+                not in self._cache]
+        if not todo:
+            return 0
+        views = [v for c in todo for v in c]
+        kind = views[0].kind
+        for c in todo:           # the per-cohort miss the unfused path counts
+            self._count_cache(False, c[0].group_id, kind, "self")
+        gids = sorted({c[0].group_id for c in todo})
+        with self._obs.span("query.self_batch",
+                            histogram="query_batch_seconds",
+                            labels={"group": "+".join(gids), "kind": kind,
+                                    "op": "self"},
+                            group="+".join(gids), kind=kind,
+                            streams=len(views), cohorts=len(todo)) as sp:
+            est = views[0].estimator.estimate_batch(
+                stack_states([v.state for v in views]), clamp=clamp,
+                use_pallas=self._use_pallas, interpret=self._interpret)
+            sp.sync(*jax.tree_util.tree_leaves(est))
+        lo = 0
+        for c in todo:
+            hi = lo + len(c)
+            sub = type(est)(*(a[lo:hi] if isinstance(a, (np.ndarray,
+                                                         jax.Array))
+                              else a for a in est))
+            self._cache[self._self_key(c, clamp)] = (
+                {v.name: i for i, v in enumerate(c)}, sub)
+            lo = hi
+        return len(todo)
 
     def _join_batch(self, pairs: list[tuple[str, str]], clamp: bool) -> None:
         """Answer many join pairs of one group in a single compiled call,
@@ -194,7 +250,7 @@ class Snapshot:
             # slice array fields to the pair's row; scalar metadata
             # (stderr_kind) passes through unsliced
             self._cache[k] = type(est)(*(a[i:i + 1] if isinstance(
-                a, np.ndarray) else a for a in est))
+                a, (np.ndarray, jax.Array)) else a for a in est))
 
     def prefetch(self, queries, *, clamp: bool = True) -> None:
         """Warm the cache for a batch of :class:`ContinuousQuery` -- one
@@ -205,7 +261,11 @@ class Snapshot:
         m = self._obs.metrics
         if m.enabled and queries:
             m.inc("query_prefetch_queries_total", value=float(len(queries)))
-        join_pairs: dict[str, list[tuple[str, str]]] = {}
+        # join pairs bucket like the self path splits cohorts: by estimator
+        # INSTANCE and state shapes, not group alone -- a group mixing
+        # estimator_cfg-overridden streams or backing-epoch geometries must
+        # not stack mismatched states into one estimate_join_batch launch
+        join_pairs: dict[tuple, list[tuple[str, str]]] = {}
         for q in queries:
             if q.kind == "join":
                 a, b = q.streams
@@ -213,14 +273,16 @@ class Snapshot:
                 va, vb = self._view(a), self._view(b)
                 k = ("join", a, va.version, b, vb.version, clamp)
                 if k not in self._cache:
-                    join_pairs.setdefault(va.group_id, []).append((a, b))
+                    bucket = (va.group_id, id(va.estimator),
+                              id(vb.estimator), va.shape_sig, vb.shape_sig)
+                    join_pairs.setdefault(bucket, []).append((a, b))
             else:
                 self._self_batch(self._view(q.streams[0]), clamp)
-        for gid, pairs in join_pairs.items():
+        for bucket, pairs in join_pairs.items():
             pairs = sorted(set(pairs))
             if m.enabled:
                 m.inc("query_prefetch_join_pairs_total",
-                      value=float(len(pairs)), group=gid)
+                      value=float(len(pairs)), group=bucket[0])
             self._join_batch(pairs, clamp)
 
     # -- per-stream reference oracle -----------------------------------
@@ -233,7 +295,7 @@ class Snapshot:
         self._count_cache(hit, v.group_id, v.kind, "ref")
         if not hit:
             self._cache[key] = v.estimator.estimate_ref(v.state, clamp=clamp)
-        return self._cache[key]
+        return self._cache_get(key)
 
     # ------------------------------------------------------------------
     def self_join(self, name: str, s: int | None = None, *,
@@ -273,7 +335,7 @@ class Snapshot:
             self._count_cache(hit, va.group_id, va.kind, "join")
             if not hit:
                 self._join_batch([(a, b)], clamp)
-            est = self._cache[k]
+            est = self._cache_get(k)
         else:
             k = ("join_ref", a, va.version, b, vb.version, clamp)
             hit = k in self._cache
@@ -281,7 +343,7 @@ class Snapshot:
             if not hit:
                 self._cache[k] = va.estimator.estimate_join_ref(
                     va.state, vb.state, clamp=clamp)
-            est = self._cache[k]
+            est = self._cache_get(k)
         j = float(est.g[0, li])
         on, off = float(est.stderr[0, li]), float(est.stderr_offline[0, li])
         xs = est.x[0, li:]
@@ -306,6 +368,14 @@ class ContinuousQuery:
     kind: str                       # "self_join" | "join" | "all_thresholds"
     streams: tuple                  # (a,) or (a, b)
     s: int | None = None
+    priority: int = 1               # planner scheduling class; LOWER value is
+    #   served first and throttled last (0 = most critical)
+    tenant: str | None = None       # admission-control budget account;
+    #   defaults to the first stream name (one tenant per stream)
+
+    @property
+    def tenant_id(self) -> str:
+        return self.tenant if self.tenant is not None else self.streams[0]
 
     def evaluate(self, snap: Snapshot):
         if self.kind == "self_join":
@@ -322,20 +392,31 @@ class QueryEngine:
                  use_fused_query: bool = True,
                  use_pallas: bool | None = None,
                  interpret: bool | None = None,
+                 cache_max_entries: int | None = None,
                  obs: Observability | None = None):
         self._registry = registry
         self.use_fused_query = use_fused_query
         self.use_pallas = use_pallas
         self.interpret = interpret
-        self._cache: dict = {}
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self._cache_max = (_CACHE_MAX_ENTRIES if cache_max_entries is None
+                           else cache_max_entries)
         self.obs = obs if obs is not None else Observability.disabled()
 
     def snapshot(self, names: list[str] | None = None) -> Snapshot:
         entries = (self._registry.streams() if names is None
                    else [self._registry.stream(n) for n in names])
-        if len(self._cache) > _CACHE_MAX_ENTRIES:
-            self._cache.clear()
-            self.obs.metrics.inc("query_cache_evictions_total")
+        # LRU eviction: drop only the least-recently-used entries down to
+        # the bound (every read refreshes recency via Snapshot._cache_get),
+        # so one overflowing snapshot can never cold-start hot standing
+        # queries the way a wholesale clear() did
+        evicted = 0
+        while len(self._cache) > self._cache_max:
+            self._cache.popitem(last=False)
+            evicted += 1
+        if evicted:
+            self.obs.metrics.inc("query_cache_evictions_total",
+                                 value=float(evicted))
         with self.obs.span("query.snapshot",
                            histogram="query_snapshot_seconds",
                            streams=len(entries)):

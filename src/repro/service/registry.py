@@ -61,6 +61,13 @@ class HashGroup:
                 opts=self.estimator_opts.get(kind))
         return self._estimators[kind]
 
+    def cached_estimator(self, kind: str) -> Estimator | None:
+        """The group's cfg-derived instance for ``kind`` if one has been
+        constructed -- the planner's cross-group fusion eligibility test
+        (an ``estimator_cfg``-overridden stream's instance is never this
+        one, so it never fuses across groups)."""
+        return self._estimators.get(kind)
+
 
 @dataclasses.dataclass
 class StreamEntry:
@@ -83,6 +90,13 @@ class StreamRegistry:
         self._groups: dict[str, HashGroup] = {}
         self._streams: dict[str, StreamEntry] = {}
         self._next_uid = 0
+        # topology version: bumped on every group/stream registration.
+        # Cohort membership -- which streams stack into which batched
+        # launch -- is a pure function of the registered streams, so this
+        # is the invalidation key for the query planner's cached fusion
+        # plan (planner.py; estimator-cfg choices happen at registration
+        # too, so they are covered)
+        self.version = 0
 
     # ------------------------------------------------------------------
     def create_group(self, group_id: str, cfg: SJPCConfig, *,
@@ -93,6 +107,7 @@ class StreamRegistry:
         group = HashGroup(group_id=group_id, cfg=cfg, params=params,
                           estimator_opts=dict(estimator_opts or {}))
         self._groups[group_id] = group
+        self.version += 1
         return group
 
     def register(self, name: str, group_id: str,
@@ -112,6 +127,7 @@ class StreamRegistry:
             estimator_kind=estimator)
         self._next_uid += 1
         self._streams[name] = entry
+        self.version += 1
         return entry
 
     # ------------------------------------------------------------------

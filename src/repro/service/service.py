@@ -34,6 +34,7 @@ from repro.obs import (AccuracyAuditor, Observability, Tracer,
                        default_registry, default_tracer)
 
 from .ingest import IngestPipeline
+from .planner import PlannerConfig, QueryPlanner
 from .query import ContinuousQuery, QueryEngine, QueryResult, Snapshot
 from .registry import HashGroup, StreamEntry, StreamRegistry
 
@@ -65,6 +66,11 @@ class ServiceConfig:
     audit_max_records: int = 65536   # audit skip threshold (exact oracle cost)
     trace_sink: object = None        # JSON-lines span sink: path or file-like
     trace_annotate: bool = False     # bracket spans in jax.profiler annotations
+    use_planner: bool = True         # plan poll() through the query planner
+                                     # (cross-group fusion + admission,
+                                     # DESIGN.md §16); False = the PR 3
+                                     # per-group prefetch path
+    planner: PlannerConfig = PlannerConfig()   # fusion/budget knobs
 
 
 class EstimationService:
@@ -86,6 +92,9 @@ class EstimationService:
                                   obs=self.obs)
         self._pipelines: dict[str, IngestPipeline] = {}
         self._continuous: dict[str, ContinuousQuery] = {}
+        self.planner = (QueryPlanner(self.registry, cfg.planner,
+                                     obs=self.obs)
+                        if cfg.use_planner else None)
         self.stats = {"ingested_records": 0, "flush_s": 0.0, "epochs": 0,
                       "snapshots": 0, "polls": 0}
 
@@ -245,27 +254,46 @@ class EstimationService:
         if query.kind == "join":
             self.registry.require_joinable(*query.streams)
         self._continuous[query.name] = query
+        if self.planner is not None:
+            self.planner.invalidate_queries()
+
+    def set_tenant_budget(self, tenant: str, refill: float | None, *,
+                          burst: float | None = None) -> None:
+        """Set (or clear) one tenant's per-poll standing-query budget; see
+        :meth:`QueryPlanner.set_tenant_budget`.  Requires the planner."""
+        if self.planner is None:
+            raise ValueError("admission control needs use_planner=True")
+        self.planner.set_tenant_budget(tenant, refill, burst=burst)
 
     def poll(self) -> dict[str, QueryResult | dict[int, QueryResult]]:
         """Evaluate every continuous query against ONE shared snapshot.
 
-        ``prefetch`` first batches the device work: one ``estimate_batch``
-        per touched hash group answers every self-join/all-thresholds cell,
-        and all registered join pairs of a group share one
-        ``estimate_join_batch`` -- the individual ``evaluate`` calls below
-        are then pure cache lookups.
+        With the planner (the default) the device work is scheduled through
+        the cached fusion plan: matching cohorts across hash groups share
+        one ``estimate_batch`` launch, launches run in priority order, and
+        over-budget tenants are served their last fresh result with
+        ``stale=True`` (DESIGN.md §16).  With ``use_planner=False`` the
+        PR 3 path prefetches one batch per touched group instead.  Either
+        way the individual ``evaluate`` calls are pure cache lookups.
         """
         with self.obs.span("service.poll", histogram="service_poll_seconds",
                            queries=len(self._continuous)):
             snap = self.snapshot()
-            snap.prefetch(self._continuous.values())
+            if self.planner is not None:
+                out = self.planner.poll(snap, self._continuous)
+            else:
+                snap.prefetch(self._continuous.values())
+                out = {name: q.evaluate(snap)
+                       for name, q in self._continuous.items()}
             self.stats["polls"] += 1
-            out = {name: q.evaluate(snap)
-                   for name, q in self._continuous.items()}
         if self.obs.auditor is not None:
             for q in self._continuous.values():
+                res = out[q.name]
+                if (res.stale if isinstance(res, QueryResult)
+                        else any(r.stale for r in res.values())):
+                    continue          # already audited when it was fresh
                 kind = self.registry.stream(q.streams[0]).estimator_kind
-                self.obs.auditor.maybe_audit(out[q.name], kind)
+                self.obs.auditor.maybe_audit(res, kind)
         return out
 
     # -- introspection --------------------------------------------------

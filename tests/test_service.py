@@ -192,20 +192,30 @@ def _run_epochs(svc, cfg, name, epoch_batches):
 
 
 def _replay_window(cfg, group, entry, epoch_batches, live_epoch_ids,
-                   batch_rows, rounds_per_epoch):
-    """Offline rebuild of exactly the live epochs with the pipeline's keys."""
+                   batch_rows, rounds_per_epoch=None):
+    """Offline rebuild of exactly the live epochs with the pipeline's keys.
+
+    The replay coordinate is the stream's OWN consumed-round count: each
+    epoch (one flush here) advances it by ceil(rows / batch_rows), no
+    matter how many extra rounds a busier cohort-mate forced the shared
+    dispatch to run (those are fully masked for this stream and consume
+    none of its randomness).  ``rounds_per_epoch``, when given, asserts
+    the expected per-epoch round count (fixed-size epochs)."""
     _, st = sjpc.init(cfg)
+    rounds_of = [-(-b.shape[0] // batch_rows) for b in epoch_batches]
     for ep in live_epoch_ids:
         rows = epoch_batches[ep]
-        for r in range(rounds_per_epoch):
+        start = sum(rounds_of[:ep])
+        if rounds_per_epoch is not None:
+            assert rounds_of[ep] == rounds_per_epoch
+        for r in range(rounds_of[ep]):
             chunk = rows[r * batch_rows:(r + 1) * batch_rows]
             padded = np.zeros((batch_rows, cfg.d), np.uint32)
             padded[:chunk.shape[0]] = chunk
             mask = np.zeros((batch_rows,), np.int32)
             mask[:chunk.shape[0]] = 1
             st = sjpc.update(cfg, group.params, st, jnp.asarray(padded),
-                             key=ingest_key(cfg, entry.uid,
-                                            ep * rounds_per_epoch + r),
+                             key=ingest_key(cfg, entry.uid, start + r),
                              row_mask=jnp.asarray(mask))
     return st
 
@@ -288,9 +298,11 @@ class TestServiceQueries:
         snap = svc.snapshot()
         for name in ("a", "b"):
             entry = svc.registry.stream(name)
+            # 40-row "a" epochs consume 2 rounds each, 30-row "b" epochs
+            # just 1 -- b's replay coordinate must NOT be inflated by the
+            # cohort rounds a forced (the PR 7 replay-determinism fix)
             offline_state = _replay_window(cfg, group, entry, batches[name],
-                                           [3], batch_rows=32,
-                                           rounds_per_epoch=2)
+                                           [3], batch_rows=32)
             offline = sjpc.estimate(cfg, offline_state)
             r = snap.self_join(name)
             assert r.estimate == pytest.approx(offline.g_s, rel=1e-12)
@@ -301,7 +313,7 @@ class TestServiceQueries:
         group = svc.registry.group("g")
         ea, eb = svc.registry.stream("a"), svc.registry.stream("b")
         sa = _replay_window(cfg, group, ea, batches["a"], [3], 32, 2)
-        sb = _replay_window(cfg, group, eb, batches["b"], [3], 32, 2)
+        sb = _replay_window(cfg, group, eb, batches["b"], [3], 32)
         offline = sjpc.estimate_join(cfg, sa, sb)
         r = svc.snapshot().join("a", "b")
         assert r.estimate == pytest.approx(offline.g_s, rel=1e-12)
