@@ -102,9 +102,14 @@ def service_table(res):
     svc = res.get("service")
     if not isinstance(svc, dict) or not svc:
         return ""
-    out = ["#### Service — batched multi-tenant ingest / query latency\n",
-           "| row | tenants | shards | records | records/sec |",
-           "|---|---|---|---|---|"]
+    out = ["#### Service — batched multi-tenant ingest / query latency\n"]
+    if svc.get("resolved_impls"):
+        out.append(f"- backend {svc.get('backend', '?')}; kernel impls: "
+                   + ", ".join(f"{op}={name}" for op, name
+                               in sorted(svc["resolved_impls"].items()))
+                   + "\n")
+    out += ["| row | tenants | shards | records | records/sec |",
+            "|---|---|---|---|---|"]
     # stable order: ingest rows sorted (fused?, tenants, key), then executor
     # rows sorted by shard count -- NOT dict insertion order
     ingest = sorted(
@@ -284,8 +289,28 @@ def paper_tables(results_path):
             out.append(f"- {k}: " + json.dumps(v, sort_keys=True))
     if isinstance(res.get("kernels"), dict):
         out.append("\n#### Kernel micro-bench (interpret-mode conformance)\n")
-        for k, v in sorted(res["kernels"].items()):
-            out.append(f"- {k}: " + json.dumps(v, sort_keys=True))
+        kr = res["kernels"]
+        resolved = kr.get("resolved_impls")
+        if resolved:
+            out.append("- registry auto-dispatch on this backend: "
+                       + ", ".join(f"{op}={name}"
+                                   for op, name in sorted(resolved.items())))
+        bench_rows = [(k, v) for k, v in sorted(kr.items())
+                      if isinstance(v, dict) and "match" in v]
+        if bench_rows:
+            out.append("")
+            out.append("| case | backend | impl | match | ref_s "
+                       "| pallas_interp_s |")
+            out.append("|---|---|---|---|---|---|")
+            for k, v in bench_rows:
+                out.append(f"| {k} | {v.get('backend', '?')} "
+                           f"| {v.get('impl', '?')} | {v['match']} "
+                           f"| {v['ref_s']:.3f} "
+                           f"| {v['pallas_interp_s']:.3f} |")
+        for k, v in sorted(kr.items()):
+            if k != "resolved_impls" and not (isinstance(v, dict)
+                                              and "match" in v):
+                out.append(f"- {k}: " + json.dumps(v, sort_keys=True))
     svc = service_table(res)
     if svc:
         out.append("\n" + svc)

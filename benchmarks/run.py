@@ -26,9 +26,13 @@ def bench_kernels():
     from repro.core import sketch as sk
     from repro.core.hashing import P31
     from repro.kernels.ops import sketch_update, sketch_moments
+    from repro.kernels.registry import kernel_registry
 
+    reg = kernel_registry()
     rng = np.random.default_rng(0)
-    out = {}
+    # which registry impl auto dispatch resolves to per op on this backend
+    # (what the timed use_pallas=None/True/False rows actually ran)
+    out = {"resolved_impls": reg.resolution()}
     for n, t, w in [(4096, 3, 1024), (16384, 3, 4096)]:
         params = sk.make_sketch_params(rng, t)
         k1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
@@ -46,7 +50,9 @@ def bench_kernels():
         t_pal = time.time() - t0
         match = bool(jnp.array_equal(ref, pal))
         out[f"n{n}_t{t}_w{w}"] = {"match": match, "ref_s": t_ref,
-                                  "pallas_interp_s": t_pal}
+                                  "pallas_interp_s": t_pal,
+                                  "backend": jax.default_backend(),
+                                  "impl": reg.resolve("sketch_update").name}
         print(f"sketch_update n={n} t={t} w={w}: match={match} "
               f"(ref {t_ref:.2f}s, pallas-interpret {t_pal:.2f}s)")
         assert match
@@ -81,9 +87,12 @@ def bench_service():
     from repro.core.sjpc import SJPCConfig
     from repro.service import ContinuousQuery, EstimationService, ServiceConfig
 
+    from repro.kernels.registry import kernel_registry
+
     cfg = SJPCConfig(d=6, s=4, ratio=0.5, width=1024, depth=3, seed=11)
     rng = np.random.default_rng(0)
-    out = {}
+    out = {"backend": jax.default_backend(),
+           "resolved_impls": kernel_registry().resolution()}
     records_per_tenant = 4096
 
     def run_pipeline(tenants, *, use_fused, tag, trace_sink=None):
@@ -197,9 +206,8 @@ def bench_service():
         out.update(_executor_rows())
     else:
         import subprocess
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + " --xla_force_host_platform_device_count=4").strip()
+        from repro.platform import subprocess_env
+        env = subprocess_env(4)
         env["PYTHONPATH"] = os.pathsep.join(
             p for p in (os.path.join(os.path.dirname(HERE), "src"),
                         env.get("PYTHONPATH")) if p)
@@ -451,9 +459,11 @@ def bench_equal_space():
               for s in range(cfg.s, cfg.d + 1)}
 
     kinds = E.available()
+    from repro.kernels.registry import kernel_registry
     out = {"workload": {"records": n_records, "d": cfg.d,
                         "g_true": {str(s): g for s, g in g_true.items()},
-                        "sjpc_bytes": cfg.counters_bytes}}
+                        "sjpc_bytes": cfg.counters_bytes},
+           "resolved_impls": kernel_registry().resolution()}
 
     # side-by-side accuracy: one service, every kind in one hash group
     svc = EstimationService(ServiceConfig(batch_rows=2048,

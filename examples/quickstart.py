@@ -10,8 +10,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import platform as plat
 from repro.core import sjpc, exact
 from repro.data.synthetic import shingle_records
+
+# pick the fastest available backend (tpu > gpu > cpu); the kernel registry
+# dispatches each op to its best impl for this backend automatically
+print(f"backend: {plat.bootstrap('auto')}")
 
 D, S_MIN, N = 6, 3, 20_000
 

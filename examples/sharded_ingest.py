@@ -19,13 +19,22 @@ Three things happen here:
    the sampling draw (identical at ratio=1.0, where no per-record sampling
    randomness exists).
 
-Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to watch
-the executor pick the real shard_map path on a CPU-only host.
+``repro.platform.force_host_device_count`` (below, before jax initializes)
+forces 4 XLA host devices on a CPU-only host so the executor picks the
+real shard_map path -- the same idiom benchmarks/run.py uses via
+``repro.platform.subprocess_env``.
 """
 import numpy as np
+
+from repro import platform as plat
+
+plat.force_host_device_count(4)      # must precede the first jax dispatch
+
 import jax
 
 from repro.core import exact, sjpc
+
+print(f"backend: {plat.bootstrap('auto')}, {jax.device_count()} device(s)")
 
 D, S, WIDTH, DEPTH = 6, 4, 4096, 3
 MICRO, N_MICRO, SHARDS = 1000, 6, 2

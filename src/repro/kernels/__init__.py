@@ -1,4 +1,7 @@
-"""Pallas TPU kernels for the SJPC hot path (validated in interpret mode on
-CPU against the pure-jnp oracles in ref.py)."""
-from .ops import (fingerprint, fused_query, sketch_update,  # noqa: F401
-                  sketch_moments, make_sjpc_update_fn)
+"""SJPC kernel package: jnp oracles, Pallas TPU/GPU tiers, and the
+capability registry that dispatches between them (validated in interpret
+mode on CPU against the pure-jnp oracles in ref.py)."""
+from .ops import (fingerprint, fused_ingest, fused_pairs,  # noqa: F401
+                  fused_query, sketch_update, sketch_moments,
+                  flash_attention, make_sjpc_update_fn)
+from .registry import kernel_registry, KernelRegistry  # noqa: F401

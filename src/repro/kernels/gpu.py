@@ -1,0 +1,307 @@
+"""Pallas GPU (Triton / Mosaic-GPU lowering) tier for the four fused
+kernels: ``fingerprint``, ``fused_ingest``, ``fused_query``,
+``fused_pairs``.
+
+The TPU kernels in this package lean on a TPU-only guarantee: grid axes
+iterate *sequentially*, so a kernel may revisit the same output block
+across grid steps and accumulate into it (the VMEM-resident-accumulator
+pattern).  On GPU every grid cell is an independent, concurrently-running
+program -- cross-step accumulation into a shared output block is a data
+race.  These lowerings therefore restructure each kernel so that every
+program owns its output block exclusively:
+
+  fingerprint    (B_tiles, M_tiles) grid -- already race-free (each tile
+                 writes only itself); re-tiled with GPU-friendly blocks.
+  fused_query    one program per (stream, level, depth-row): the whole
+                 width-w row is reduced inside the program, no partials.
+  fused_pairs    (N, i_tiles) grid; each program holds its i-tile of the
+                 sample against the FULL sample row and emits a private
+                 (d+1,) partial histogram; partials are summed outside the
+                 kernel (split-K style).
+  fused_ingest   (L, w_tiles) grid; each program owns one (t, block_w)
+                 counter tile and loops over the batch *inside* the
+                 program, so the accumulator lives in registers and no two
+                 programs touch the same counters.
+
+Only generic ``pl.pallas_call`` features are used (no ``pltpu`` imports),
+so the same kernels run under ``interpret=True`` on any backend -- which
+is how the CPU CI lane conformance-tests this tier bit-exact against the
+``kernels/ref.py`` oracles without a GPU.  On a real GPU backend
+(``jax.default_backend() == "gpu"``) the registry dispatches here with
+``interpret=False`` and pallas lowers through Triton (or Mosaic GPU on
+newer jax).  Counts stay exact for the same reason as on TPU: every f32
+partial sum is an integer below 2^24 and cross-block accumulation is
+int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import (addmod_p31, cw_hash_pair, hash_sign,
+                                mulmod_p31, reduce_p31)
+
+DEFAULT_BLOCK_B = 128      # fingerprint / ingest batch tile
+DEFAULT_BLOCK_M = 64       # fingerprint combination tile
+DEFAULT_BLOCK_R = 128      # fused_pairs i-tile
+DEFAULT_BLOCK_W = 1024     # fused_ingest width tile
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+def _masked_horner(values, masks, ids, base):
+    """(BB, d) reduced values x (BM, d) masks -> (BB, BM) fingerprints."""
+    seed = addmod_p31(reduce_p31(ids), jnp.uint32(1))              # (BM,)
+    fp = jnp.broadcast_to(seed[None, :], (values.shape[0], seed.shape[0]))
+    for col in range(values.shape[1]):                             # d static
+        v = addmod_p31(values[:, col:col + 1], jnp.uint32(1))
+        nxt = addmod_p31(mulmod_p31(fp, base), v)
+        fp = jnp.where(masks[None, :, col] != 0, nxt, fp)
+    return fp
+
+
+def _fingerprint_kernel(values_ref, masks_ref, ids_ref, bases_ref,
+                        out1_ref, out2_ref):
+    values = reduce_p31(values_ref[...])
+    for which, out_ref in ((0, out1_ref), (1, out2_ref)):
+        out_ref[...] = _masked_horner(values, masks_ref[...], ids_ref[...],
+                                      bases_ref[which])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m",
+                                             "interpret"))
+def fingerprint_gpu(values, combo_masks, combo_ids, bases,
+                    *, block_b: int = DEFAULT_BLOCK_B,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    interpret: bool = True):
+    """values (B, d) x combos (M, d) -> (fp1, fp2) each (B, M) uint32."""
+    values = values.astype(jnp.uint32)
+    combo_masks = combo_masks.astype(jnp.uint32)
+    combo_ids = combo_ids.astype(jnp.uint32)
+    B, d = values.shape
+    M = combo_ids.shape[0]
+    bb = min(block_b, max(B, 8))
+    bm = min(block_m, max(M, 8))
+    pad_b, pad_m = (-B) % bb, (-M) % bm
+    if pad_b:
+        values = jnp.pad(values, ((0, pad_b), (0, 0)))
+    if pad_m:
+        combo_masks = jnp.pad(combo_masks, ((0, pad_m), (0, 0)))
+        combo_ids = jnp.pad(combo_ids, (0, pad_m))
+    grid = (values.shape[0] // bb, combo_ids.shape[0] // bm)
+    out_shape = (values.shape[0], combo_ids.shape[0])
+    fp1, fp2 = pl.pallas_call(
+        _fingerprint_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda gb, gm: (gb, 0)),
+            pl.BlockSpec((bm, d), lambda gb, gm: (gm, 0)),
+            pl.BlockSpec((bm,), lambda gb, gm: (gm,)),
+            pl.BlockSpec((2,), lambda gb, gm: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bm), lambda gb, gm: (gb, gm)),
+            pl.BlockSpec((bb, bm), lambda gb, gm: (gb, gm)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(out_shape, jnp.uint32),
+            jax.ShapeDtypeStruct(out_shape, jnp.uint32),
+        ],
+        interpret=interpret,
+    )(values, combo_masks, combo_ids, bases)
+    return fp1[:B, :M], fp2[:B, :M]
+
+
+# ---------------------------------------------------------------------------
+# fused_query
+# ---------------------------------------------------------------------------
+
+def _query_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[...].astype(jnp.float32)                   # (1, w)
+    b = b_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(a * b, axis=-1)               # (1,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def fused_query_gpu(counters_a, counters_b, *, block_w: int | None = None,
+                    interpret: bool = True):
+    """(N, L, t, w) x (N, L, t, w) -> (N, L, t) float32 row moments.
+
+    One program per (stream, level, depth) row; the full width reduces
+    inside the program (w is at most a few thousand for SJPC sketches, so
+    one row is a comfortable register/SMEM tile on GPU).  ``block_w`` is
+    accepted for dispatch-signature parity and ignored: there is no
+    cross-program accumulation to tile.
+    """
+    del block_w
+    assert counters_a.shape == counters_b.shape, \
+        (counters_a.shape, counters_b.shape)
+    N, L, t, w = counters_a.shape
+    rows = N * L * t
+    a = counters_a.reshape(rows, w)
+    b = counters_b.reshape(rows, w)
+    out = pl.pallas_call(
+        _query_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda r: (r, 0)),
+            pl.BlockSpec((1, w), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out.reshape(N, L, t)
+
+
+# ---------------------------------------------------------------------------
+# fused_pairs
+# ---------------------------------------------------------------------------
+
+def _pairs_kernel(items_i_ref, items_all_ref, valid_i_ref, valid_all_ref,
+                  out_ref, *, d: int, block_r: int):
+    gi = pl.program_id(1)
+    a = items_i_ref[0]                                   # (BR, d) uint32
+    b = items_all_ref[0]                                 # (R_pad, d)
+    r_all = b.shape[0]
+    match = jnp.zeros((block_r, r_all), jnp.int32)
+    for c in range(d):                                   # d static, small
+        match += (a[:, c:c + 1] == b[None, :, c]).astype(jnp.int32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_r, r_all), 0) \
+        + gi * block_r
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_r, r_all), 1)
+    ok = (valid_i_ref[0][:, None] != 0) & (valid_all_ref[0][None, :] != 0) \
+        & (row != col)
+    flat = jnp.where(ok, match, -1)                      # -1 = masked out
+    for k in range(d + 1):
+        out_ref[0, 0, k] = jnp.sum((flat == k).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def fused_pairs_gpu(items, valid, *, block_r: int = DEFAULT_BLOCK_R,
+                    interpret: bool = True):
+    """(N, R, d) samples x (N, R) validity -> (N, d+1) int32 histograms.
+
+    Each (stream, i-tile) program scans its record tile against the whole
+    sample row and emits a private partial histogram; partials reduce in
+    one ``jnp.sum`` outside the kernel, so no two programs ever write the
+    same memory (split-K).
+    """
+    N, R, d = items.shape
+    assert valid.shape == (N, R), (valid.shape, (N, R))
+    items = items.astype(jnp.uint32)
+    valid = valid.astype(jnp.int32)
+    block_r = min(block_r, max(R, 8))
+    pad_r = (-R) % block_r
+    if pad_r:                     # padded slots carry valid=0: contribute 0
+        items = jnp.pad(items, ((0, 0), (0, pad_r), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad_r)))
+    r_pad = R + pad_r
+    tiles = r_pad // block_r
+    kernel = functools.partial(_pairs_kernel, d=d, block_r=block_r)
+    partials = pl.pallas_call(
+        kernel,
+        grid=(N, tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_r, d), lambda n, gi: (n, gi, 0)),
+            pl.BlockSpec((1, r_pad, d), lambda n, gi: (n, 0, 0)),
+            pl.BlockSpec((1, block_r), lambda n, gi: (n, gi)),
+            pl.BlockSpec((1, r_pad), lambda n, gi: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d + 1), lambda n, gi: (n, gi, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, tiles, d + 1), jnp.int32),
+        interpret=interpret,
+    )(items, items, valid, valid)
+    return jnp.sum(partials, axis=1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused_ingest
+# ---------------------------------------------------------------------------
+
+def _ingest_kernel(values_ref, masks_ref, ids_ref, bases_ref, wt_ref,
+                   counters_ref, bcoef_ref, scoef_ref, out_ref,
+                   *, d: int, depth: int, block_b: int, block_w: int,
+                   num_blocks: int):
+    w_total = block_w * pl.num_programs(1)
+    w_lo = (pl.program_id(1) * block_w).astype(jnp.int32)
+    acc = counters_ref[0]                                # (t, block_w) int32
+    masks = masks_ref[0]                                 # (m_max, d)
+    ids = ids_ref[0]                                     # (m_max,)
+    for blk in range(num_blocks):                        # batch loop INSIDE
+        lo = blk * block_b
+        values = reduce_p31(values_ref[lo:lo + block_b, :])
+        fp1 = _masked_horner(values, masks, ids, bases_ref[0]).reshape(-1)
+        fp2 = _masked_horner(values, masks, ids, bases_ref[1]).reshape(-1)
+        weight = wt_ref[lo:lo + block_b, 0, :].reshape(-1) \
+            .astype(jnp.float32)                         # (BB*m_max,)
+        col = jax.lax.broadcasted_iota(jnp.int32,
+                                       (fp1.shape[0], block_w), 1)
+        rows = []
+        for i in range(depth):                           # depth static
+            hb = cw_hash_pair(fp1, fp2, bcoef_ref[0, i])
+            bucket = (hb & jnp.uint32(w_total - 1)).astype(jnp.int32)
+            onehot = (bucket[:, None] - w_lo == col).astype(jnp.float32)
+            sign = hash_sign(cw_hash_pair(fp1, fp2, scoef_ref[0, i])) \
+                .astype(jnp.float32)
+            contrib = jnp.sum((sign * weight)[:, None] * onehot, axis=0)
+            rows.append(contrib.astype(jnp.int32))       # exact: ints < 2^24
+        acc = acc + jnp.stack(rows)
+    out_ref[0] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_w", "interpret"))
+def fused_ingest_gpu(counters, values, masks, ids, bases,
+                     bucket_coeffs, sign_coeffs, weights,
+                     *, block_b: int = DEFAULT_BLOCK_B,
+                     block_w: int = DEFAULT_BLOCK_W,
+                     interpret: bool = True):
+    """One launch: records -> fingerprints -> every level's sketch.
+
+    Same contract and padded-lattice layout as
+    :func:`repro.kernels.fused_ingest.fused_ingest_pallas`; the grid is
+    (L, w_tiles) with the batch loop moved inside the program so each
+    (level, width-tile) counter block has exactly one writer.
+    """
+    L, t, w = counters.shape
+    B, d = values.shape
+    m_max = ids.shape[1]
+    values = values.astype(jnp.uint32)
+    weights = weights.astype(jnp.int32)
+    block_b = min(block_b, max(B, 8))
+    block_w = min(block_w, w)
+    assert w & (w - 1) == 0, "sketch width must be a power of two"
+    assert block_w & (block_w - 1) == 0, \
+        f"block_w={block_w} must be a power of two (so it divides w={w})"
+    pad_b = (-B) % block_b
+    if pad_b:                    # padded rows carry weight 0: contribute 0
+        values = jnp.pad(values, ((0, pad_b), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad_b), (0, 0), (0, 0)))
+    b_pad = B + pad_b
+    kernel = functools.partial(_ingest_kernel, d=d, depth=t,
+                               block_b=block_b, block_w=block_w,
+                               num_blocks=b_pad // block_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, w // block_w),
+        in_specs=[
+            pl.BlockSpec((b_pad, d), lambda l, gw: (0, 0)),
+            pl.BlockSpec((1, m_max, d), lambda l, gw: (l, 0, 0)),
+            pl.BlockSpec((1, m_max), lambda l, gw: (l, 0)),
+            pl.BlockSpec((2,), lambda l, gw: (0,)),
+            pl.BlockSpec((b_pad, 1, m_max), lambda l, gw: (0, l, 0)),
+            pl.BlockSpec((1, t, block_w), lambda l, gw: (l, 0, gw)),
+            pl.BlockSpec((1, t, 2, 4), lambda l, gw: (l, 0, 0, 0)),
+            pl.BlockSpec((1, t, 2, 4), lambda l, gw: (l, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, block_w), lambda l, gw: (l, 0, gw)),
+        out_shape=jax.ShapeDtypeStruct((L, t, w), jnp.int32),
+        interpret=interpret,
+    )(values, masks, ids, bases, weights, counters, bucket_coeffs,
+      sign_coeffs)

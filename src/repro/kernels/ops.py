@@ -1,9 +1,18 @@
-"""Public jit'd entry points for the SJPC kernels.
+"""Public jit'd entry points for the SJPC kernels, routed through the
+capability registry (``kernels/registry.py``, DESIGN.md §17).
 
-``use_pallas`` selects the Pallas path (interpret=True on CPU -- this
-container -- or compiled on real TPU); the default dispatch picks Pallas on
-TPU backends and the pure-jnp reference elsewhere, so the library is always
-correct and becomes fast where it matters.
+Each op registers its named implementations below -- the ``jnp_ref``
+oracle itself, the ``pallas_tpu`` tier, a ``pallas_gpu`` Triton/Mosaic
+lowering for the four fused kernels, and a ``pallas_interpret`` tier
+(the TPU kernel under the Pallas interpreter, runnable anywhere) -- and
+dispatch resolves the fastest available one for the current backend.
+
+The legacy keyword surface is preserved: ``use_pallas=True`` picks the
+native pallas tier for this backend (interpreter elsewhere),
+``use_pallas=False`` pins the jnp reference, and the new ``impl=`` kwarg
+forces any registered implementation by name.  Explicit ``use_pallas=``/
+``impl=`` always wins over :meth:`KernelRegistry.force` /
+``REPRO_KERNEL_IMPL`` pinning, which only redirect auto dispatch.
 """
 from __future__ import annotations
 
@@ -14,7 +23,10 @@ import jax.numpy as jnp
 
 from repro.core.sketch import SketchParams
 from repro.obs.metrics import default_registry
-from . import ref
+from . import ref, registry
+from .registry import (JNP_REF, PALLAS_GPU, PALLAS_INTERPRET, PALLAS_TPU,
+                       PRIORITY_INTERPRET, PRIORITY_NATIVE, PRIORITY_REF,
+                       KernelImpl, kernel_registry, on_platforms)
 from .fingerprint import fingerprint_pallas
 from .fused_ingest import fused_ingest_pallas
 from .fused_pairs import fused_pairs_pallas
@@ -22,122 +34,137 @@ from .fused_query import fused_query_pallas
 from .sketch_update import sketch_update_pallas
 from .sketch_moments import sketch_moments_pallas
 from .flash_attention import flash_attention as flash_attention_kernel
+from . import gpu
+
+_REG = kernel_registry()
+
+GPU_PLATFORMS = ("gpu", "cuda", "rocm")
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _any_platform(_platform: str) -> bool:
+    return True
 
 
-def _count(kernel: str, use_pallas: bool) -> None:
-    """``kernel_dispatch_total{kernel, path}`` in the process-global
-    registry: which path (pallas vs jnp reference) each entry point
-    resolved to.  Calls under an enclosing jit count once per *trace*,
-    not per execution -- the number answers "which kernels compiled,
-    via which path", the dispatch-shape question DESIGN.md §15.3 cares
+def _count(kernel: str, impl: KernelImpl) -> None:
+    """``kernel_dispatch_total{kernel, path, impl}`` in the process-global
+    registry: which implementation each entry point resolved to.  ``path``
+    keeps the legacy two-way pallas/jnp label; ``impl`` is the registry
+    name.  Calls under an enclosing jit count once per *trace*, not per
+    execution -- the number answers "which kernels compiled, via which
+    implementation", the dispatch-shape question DESIGN.md §15.3 cares
     about."""
     reg = default_registry()
     if reg.enabled:
-        reg.inc("kernel_dispatch_total", kernel=kernel,
-                path="pallas" if use_pallas else "jnp")
+        reg.inc("kernel_dispatch_total", kernel=kernel, path=impl.path,
+                impl=impl.name)
 
+
+def _pallas_impl(op: str) -> KernelImpl:
+    """The pallas tier ``use_pallas=True`` means on this backend: the
+    native compiled tier if the op has one here, else the interpreter."""
+    platform = jax.default_backend()
+    names = {i.name for i in _REG.impls(op)}
+    if platform == "tpu" and PALLAS_TPU in names:
+        return _REG.get(op, PALLAS_TPU)
+    if platform in GPU_PLATFORMS and PALLAS_GPU in names:
+        return _REG.get(op, PALLAS_GPU)
+    return _REG.get(op, PALLAS_INTERPRET)
+
+
+def _dispatch(op: str, use_pallas, impl: str | None) -> KernelImpl:
+    """Resolve one call's implementation and account for it."""
+    if impl is not None:
+        chosen = _REG.get(op, impl)
+    elif use_pallas is None:
+        chosen = _REG.resolve(op)
+    elif use_pallas:
+        chosen = _pallas_impl(op)
+    else:
+        chosen = _REG.get(op, JNP_REF)
+    _count(op, chosen)
+    return chosen
+
+
+def _drop_blocks(fn):
+    """Adapt a ref.py oracle to the dispatch calling convention: ignore
+    the tile-size hints that only parameterize pallas tiers."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        return fn(*args, **{k: v for k, v in kw.items()
+                            if not k.startswith("block_")})
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
 
 def fingerprint(values, combo_masks, combo_ids, bases, *, use_pallas=None,
-                interpret=None):
+                interpret=None, impl=None):
     """(B, d) records -> two (B, M) sub-value fingerprints."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("fingerprint", use_pallas)
-    if not use_pallas:
-        return ref.fingerprint_ref(values, combo_masks, combo_ids, bases)
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    return fingerprint_pallas(values, combo_masks, combo_ids, bases,
-                              interpret=interpret)
+    chosen = _dispatch("fingerprint", use_pallas, impl)
+    return chosen.call(values, combo_masks, combo_ids, bases,
+                       interpret=interpret)
 
 
 def sketch_update(counters, fp1, fp2, params: SketchParams, weights,
-                  *, use_pallas=None, interpret=None):
+                  *, use_pallas=None, interpret=None, impl=None):
     """Fast-AGMS update of one (t, w) sketch with flat fingerprint keys."""
     if weights is None:
         weights = jnp.ones(fp1.reshape(-1).shape, jnp.int32)
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("sketch_update", use_pallas)
-    if not use_pallas:
-        return ref.sketch_update_ref(counters, fp1, fp2,
-                                     params.bucket_coeffs, params.sign_coeffs,
-                                     weights)
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    return sketch_update_pallas(counters, fp1, fp2,
-                                params.bucket_coeffs, params.sign_coeffs,
-                                weights, interpret=interpret)
+    chosen = _dispatch("sketch_update", use_pallas, impl)
+    return chosen.call(counters, fp1, fp2, params.bucket_coeffs,
+                       params.sign_coeffs, weights, interpret=interpret)
 
 
 def sketch_moments(counters_a, counters_b=None, *, use_pallas=None,
-                   interpret=None):
+                   interpret=None, impl=None):
     """Row inner products; F2 when counters_b is None."""
     if counters_b is None:
         counters_b = counters_a
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("sketch_moments", use_pallas)
-    if not use_pallas:
-        return ref.sketch_moments_ref(counters_a, counters_b)
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    return sketch_moments_pallas(counters_a, counters_b, interpret=interpret)
+    chosen = _dispatch("sketch_moments", use_pallas, impl)
+    return chosen.call(counters_a, counters_b, interpret=interpret)
 
 
 def fused_ingest(counters, values, masks, ids, bases, bucket_coeffs,
                  sign_coeffs, weights, *, use_pallas=None, interpret=None,
-                 block_b=None, block_w=None):
+                 impl=None, block_b=None, block_w=None):
     """Fused fingerprint -> multi-level sketch ingest, one launch.
 
     Padded-lattice layout (see ``projections.padded_lattice``): counters
     (L, t, w), values (B, d), masks (L, m_max, d), ids (L, m_max), coeffs
-    (L, t, 2, 4), weights (B, L, m_max).  The Pallas path keeps fingerprints
-    in VMEM and counters resident across the batch grid; the fallback is the
+    (L, t, 2, 4), weights (B, L, m_max).  The Pallas tiers keep fingerprints
+    on-chip and counters resident across the batch; the fallback is the
     unfused per-level reference chain (bit-identical output).
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("fused_ingest", use_pallas)
-    if not use_pallas:
-        return ref.fused_ingest_ref(counters, values, masks, ids, bases,
-                                    bucket_coeffs, sign_coeffs, weights)
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    chosen = _dispatch("fused_ingest", use_pallas, impl)
     kwargs = {}
     if block_b is not None:
         kwargs["block_b"] = block_b
     if block_w is not None:
         kwargs["block_w"] = block_w
-    return fused_ingest_pallas(counters, values, masks, ids, bases,
-                               bucket_coeffs, sign_coeffs, weights,
-                               interpret=interpret, **kwargs)
+    return chosen.call(counters, values, masks, ids, bases, bucket_coeffs,
+                       sign_coeffs, weights, interpret=interpret, **kwargs)
 
 
 def fused_query(counters_a, counters_b=None, *, use_pallas=None,
-                interpret=None, block_w=None):
+                interpret=None, impl=None, block_w=None):
     """Batched multi-level row moments for the fused query engine.
 
     counters (N, L, t, w) stacks -> (N, L, t) float32: every (stream, level,
     depth-row) F2 (``counters_b is None``) or cross-sketch inner product in
-    one launch.  The Pallas path keeps the per-row accumulator VMEM-resident
-    across width tiles; the fallback is the one-line jnp reduction
-    (bit-identical on exact-integer inputs).
+    one launch.  The Pallas tiers keep the per-row accumulator on-chip; the
+    fallback is the one-line jnp reduction (bit-identical on exact-integer
+    inputs).
     """
     if counters_b is None:
         counters_b = counters_a
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("fused_query", use_pallas)
-    if not use_pallas:
-        return ref.fused_query_ref(counters_a, counters_b)
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    chosen = _dispatch("fused_query", use_pallas, impl)
     kwargs = {} if block_w is None else {"block_w": block_w}
-    return fused_query_pallas(counters_a, counters_b, interpret=interpret,
-                              **kwargs)
+    return chosen.call(counters_a, counters_b, interpret=interpret, **kwargs)
 
 
-def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
+def fused_pairs(items, valid, *, use_pallas=None, interpret=None, impl=None,
                 block_r=None):
     """All-pairs similarity histogram of stacked reservoir samples.
 
@@ -146,8 +173,8 @@ def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
     estimator's query hot path).  Extra leading dims collapse into the
     kernel's N grid axis and are restored on the output -- the bootstrap
     error bars (DESIGN.md §14) push their whole (streams, replicates)
-    stack through ONE launch this way.  Pallas keeps the histogram
-    accumulator VMEM-resident across pair tiles; the fallback is the jnp
+    stack through ONE launch this way.  The Pallas tiers keep the histogram
+    accumulator on-chip across pair tiles; the fallback is the jnp
     per-column reduction (bit-identical -- both are exact integer counts).
     """
     items = jnp.asarray(items)
@@ -156,45 +183,117 @@ def fused_pairs(items, valid, *, use_pallas=None, interpret=None,
     assert valid.shape == lead + items.shape[-2:-1], (items.shape,
                                                       valid.shape)
     R, d = items.shape[-2:]
-    if R == 0:                                 # empty sample: zero histogram
+    chosen = _dispatch("fused_pairs", use_pallas, impl)
+    if R == 0:
+        # empty sample: the zero histogram still goes through dispatch
+        # accounting above, so empty-reservoir queries remain visible to
+        # kernel_dispatch_total
         return jnp.zeros(lead + (d + 1,), jnp.int32)
     items = items.reshape((-1, R, d))
     valid = valid.reshape((-1, R))
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("fused_pairs", use_pallas)
-    if not use_pallas:
-        out = ref.fused_pairs_ref(items, valid)
-    else:
-        interpret = (not _on_tpu()) if interpret is None else interpret
-        kwargs = {} if block_r is None else {"block_r": block_r}
-        out = fused_pairs_pallas(items, valid, interpret=interpret, **kwargs)
+    kwargs = {} if block_r is None else {"block_r": block_r}
+    out = chosen.call(items, valid, interpret=interpret, **kwargs)
     return out.reshape(lead + (d + 1,))
 
 
-def make_sjpc_update_fn(*, use_pallas=None, interpret=None):
+def make_sjpc_update_fn(*, use_pallas=None, interpret=None, impl=None):
     """An ``update_fn`` for :func:`repro.core.sjpc.update` using kernels."""
     def fn(counters, fp1, fp2, level_params, weights):
         return sketch_update(counters, fp1, fp2, level_params, weights,
-                             use_pallas=use_pallas, interpret=interpret)
+                             use_pallas=use_pallas, interpret=interpret,
+                             impl=impl)
     return fn
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
-                    use_pallas=None, interpret=None):
+                    use_pallas=None, interpret=None, impl=None):
     """Memory-optimal attention (B,Sq,H,hd)x(B,Skv,KV,hd)->(B,Sq,H,hd).
 
     Pallas path keeps the score tiles in VMEM (the fix for the dominant
     memory term of train/prefill cells; EXPERIMENTS.md §Perf It. 4); the
     fallback is the jnp online-softmax chunked implementation.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    _count("flash_attention", use_pallas)
-    if not use_pallas:
-        from repro.models.attention import chunked_attention
-        return chunked_attention(q, k, v, causal=causal,
-                                 q_chunk=block_q, kv_chunk=block_k)
-    interpret = (not _on_tpu()) if interpret is None else interpret
-    return flash_attention_kernel(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=interpret)
+    chosen = _dispatch("flash_attention", use_pallas, impl)
+    return chosen.call(q, k, v, causal=causal, block_q=block_q,
+                       block_k=block_k, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# registrations: seven ops x {jnp_ref, pallas tiers}
+# ---------------------------------------------------------------------------
+# The jnp_ref rows register the oracle AS an implementation pointing at
+# itself -- the reference tier is definitionally conformant, and keeping it
+# in the matrix means the conformance tests also pin the oracle's own
+# calling convention.
+
+def _register_all(reg=_REG) -> None:
+    def ref_impl(op, fn):
+        reg.register(op, JNP_REF, fn=_drop_blocks(fn), oracle=fn,
+                     predicate=_any_platform, priority=PRIORITY_REF,
+                     takes_interpret=False)
+
+    def tpu_impl(op, fn, oracle):
+        reg.register(op, PALLAS_TPU, fn=fn, oracle=oracle,
+                     predicate=on_platforms("tpu"), priority=PRIORITY_NATIVE,
+                     native=("tpu",))
+
+    def gpu_impl(op, fn, oracle):
+        reg.register(op, PALLAS_GPU, fn=fn, oracle=oracle,
+                     predicate=on_platforms(*GPU_PLATFORMS),
+                     priority=PRIORITY_NATIVE, native=GPU_PLATFORMS)
+
+    def interp_impl(op, fn, oracle):
+        # the TPU kernel under the Pallas interpreter: correct on every
+        # backend (native=() so interpret defaults to True everywhere),
+        # priority below jnp_ref so it only runs when forced
+        reg.register(op, PALLAS_INTERPRET, fn=fn, oracle=oracle,
+                     predicate=_any_platform, priority=PRIORITY_INTERPRET)
+
+    ref_impl("fingerprint", ref.fingerprint_ref)
+    tpu_impl("fingerprint", fingerprint_pallas, ref.fingerprint_ref)
+    gpu_impl("fingerprint", gpu.fingerprint_gpu, ref.fingerprint_ref)
+    interp_impl("fingerprint", fingerprint_pallas, ref.fingerprint_ref)
+
+    ref_impl("sketch_update", ref.sketch_update_ref)
+    tpu_impl("sketch_update", sketch_update_pallas, ref.sketch_update_ref)
+    interp_impl("sketch_update", sketch_update_pallas, ref.sketch_update_ref)
+
+    ref_impl("sketch_moments", ref.sketch_moments_ref)
+    tpu_impl("sketch_moments", sketch_moments_pallas, ref.sketch_moments_ref)
+    interp_impl("sketch_moments", sketch_moments_pallas,
+                ref.sketch_moments_ref)
+
+    ref_impl("fused_ingest", ref.fused_ingest_ref)
+    tpu_impl("fused_ingest", fused_ingest_pallas, ref.fused_ingest_ref)
+    gpu_impl("fused_ingest", gpu.fused_ingest_gpu, ref.fused_ingest_ref)
+    interp_impl("fused_ingest", fused_ingest_pallas, ref.fused_ingest_ref)
+
+    ref_impl("fused_query", ref.fused_query_ref)
+    tpu_impl("fused_query", fused_query_pallas, ref.fused_query_ref)
+    gpu_impl("fused_query", gpu.fused_query_gpu, ref.fused_query_ref)
+    interp_impl("fused_query", fused_query_pallas, ref.fused_query_ref)
+
+    ref_impl("fused_pairs", ref.fused_pairs_ref)
+    tpu_impl("fused_pairs", fused_pairs_pallas, ref.fused_pairs_ref)
+    gpu_impl("fused_pairs", gpu.fused_pairs_gpu, ref.fused_pairs_ref)
+    interp_impl("fused_pairs", fused_pairs_pallas, ref.fused_pairs_ref)
+
+    reg.register("flash_attention", JNP_REF, fn=ref.flash_attention_ref,
+                 oracle=ref.flash_attention_ref, predicate=_any_platform,
+                 priority=PRIORITY_REF, takes_interpret=False)
+    tpu_impl("flash_attention", flash_attention_kernel,
+             ref.flash_attention_ref)
+    interp_impl("flash_attention", flash_attention_kernel,
+                ref.flash_attention_ref)
+
+    reg.check()
+
+
+_register_all()
+
+# re-exported for call sites that want the registry without a second import
+__all__ = [
+    "fingerprint", "sketch_update", "sketch_moments", "fused_ingest",
+    "fused_query", "fused_pairs", "flash_attention", "make_sjpc_update_fn",
+    "kernel_registry", "registry",
+]

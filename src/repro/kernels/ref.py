@@ -92,6 +92,18 @@ def fused_pairs_ref(items, valid):
                       for k in range(d + 1)], axis=1)
 
 
+def flash_attention_ref(q, k, v, *, causal=True, block_q=512, block_k=512):
+    """Online-softmax chunked attention, model layout (B, S, H, hd).
+
+    The chunked jnp implementation from ``repro.models.attention`` is the
+    semantic ground truth of the flash kernel (<= 1e-6 in f32; the only
+    non-integer oracle in this file).  Imported lazily so importing the
+    kernels package never pulls in the models tree."""
+    from repro.models.attention import chunked_attention
+    return chunked_attention(q, k, v, causal=causal,
+                             q_chunk=block_q, kv_chunk=block_k)
+
+
 def fused_query_ref(counters_a, counters_b):
     """Batched multi-level row moments: (N, L, t, w) x (N, L, t, w) ->
     (N, L, t) float32.  Oracle for the fused query kernel; bit-identical to

@@ -1,0 +1,274 @@
+"""Kernel capability registry (DESIGN.md §17).
+
+``kernels/ops.py`` used to hard-code seven ``if use_pallas`` dispatchers;
+this module replaces them with a declarative capability table.  Each op
+registers named implementations -- ``jnp_ref``, ``pallas_tpu``,
+``pallas_interpret``, and (for the four fused kernels) a ``pallas_gpu``
+Triton/Mosaic-GPU lowering -- where every registration carries:
+
+  * a **platform predicate** (``jax.default_backend()`` string -> bool):
+    where the implementation runs natively;
+  * a **priority**: among the available implementations the highest
+    priority wins (native compiled tiers > jnp reference > interpreter);
+  * a **mandatory oracle pointer** into ``kernels/ref.py``: the pure-jnp
+    semantic ground truth the implementation must match bit-exact (integer
+    kernels) or to <= 1e-6 (flash attention).  ``register`` *refuses*
+    an implementation without a callable oracle, so the conformance matrix
+    in tests/test_kernel_registry.py -- generated from this registry -- can
+    never silently under-cover a backend.
+
+Dispatch (``resolve``) picks the fastest available implementation for the
+current backend; tests and the CI ``pallas-interpret`` lane can pin any op
+(or every op) to a named implementation via :meth:`KernelRegistry.force`
+or the ``REPRO_KERNEL_IMPL`` environment variable
+(``pallas_interpret`` or ``fused_pairs=pallas_gpu,*=jnp_ref``).  A forced
+implementation only overrides *auto* dispatch -- call sites that pass an
+explicit ``use_pallas=``/``impl=`` (the conformance oracles) keep what
+they asked for.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+
+# conventional tier names (ops may register more)
+JNP_REF = "jnp_ref"
+PALLAS_TPU = "pallas_tpu"
+PALLAS_GPU = "pallas_gpu"
+PALLAS_INTERPRET = "pallas_interpret"
+
+FORCE_ENV = "REPRO_KERNEL_IMPL"
+
+# priorities: native compiled tiers beat the jnp reference, which beats the
+# interpreter (correct everywhere, fast nowhere -- forced for conformance)
+PRIORITY_NATIVE = 100
+PRIORITY_REF = 50
+PRIORITY_INTERPRET = 10
+
+
+class RegistryError(ValueError):
+    """A registration or completeness-contract violation."""
+
+
+def _always(_platform: str) -> bool:
+    return True
+
+
+def on_platforms(*names: str) -> Callable[[str], bool]:
+    """Predicate factory: native on exactly these backend names."""
+    def pred(platform: str) -> bool:
+        return platform in names
+    return pred
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered implementation of one op."""
+
+    op: str
+    name: str
+    fn: Callable                       # fn(*args, **kw) -> out
+    oracle: Callable                   # ground truth (kernels/ref.py)
+    predicate: Callable[[str], bool]   # platform -> natively available
+    priority: int
+    native: tuple[str, ...] = ()       # platforms where compiled lowering
+                                       # works (interpret defaults to True
+                                       # anywhere else); () = interpret-only
+    takes_interpret: bool = True       # fn accepts an ``interpret=`` kwarg
+
+    @property
+    def path(self) -> str:
+        """The legacy two-way metric label (pallas vs jnp reference)."""
+        return "jnp" if self.name == JNP_REF else "pallas"
+
+    def available(self, platform: str) -> bool:
+        return bool(self.predicate(platform))
+
+    def call(self, *args, interpret: bool | None = None,
+             platform: str | None = None, **kw):
+        """Invoke with the op's canonical positional args.
+
+        ``interpret=None`` resolves to "interpreter unless this platform is
+        one the impl compiles natively on" -- the same auto rule the old
+        hand-written dispatchers applied per call site.
+        """
+        if self.takes_interpret:
+            if interpret is None:
+                if platform is None:
+                    platform = jax.default_backend()
+                interpret = platform not in self.native
+            kw["interpret"] = interpret
+        return self.fn(*args, **kw)
+
+
+def _parse_force(spec: str) -> dict[str, str]:
+    """``"pallas_interpret"`` -> {"*": ...};
+    ``"fused_pairs=pallas_gpu,*=jnp_ref"`` -> per-op map."""
+    out: dict[str, str] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            op, name = part.split("=", 1)
+            out[op.strip()] = name.strip()
+        else:
+            out["*"] = part
+    return out
+
+
+class KernelRegistry:
+    """The per-process capability table.  ``kernel_registry()`` is the
+    instance ops.py populates at import; tests may build private ones."""
+
+    def __init__(self):
+        self._impls: dict[str, dict[str, KernelImpl]] = {}
+        self._forced: dict[str, str] = {}
+        self._env_cache: tuple[str | None, dict[str, str]] = (None, {})
+
+    # -- registration ---------------------------------------------------
+    def register(self, op: str, name: str, *, fn: Callable,
+                 oracle: Callable, predicate: Callable[[str], bool],
+                 priority: int, native: tuple[str, ...] = (),
+                 takes_interpret: bool = True) -> KernelImpl:
+        """Register one implementation.  The oracle is MANDATORY: an impl
+        with no (or a non-callable) oracle is rejected here, which makes
+        the registry-generated conformance matrix fail at *collection*
+        rather than at someone remembering to extend a test file."""
+        if not callable(oracle):
+            raise RegistryError(
+                f"{op}/{name}: every registered kernel implementation must "
+                f"point at its conformance oracle in kernels/ref.py "
+                f"(got {oracle!r})")
+        if not callable(fn):
+            raise RegistryError(f"{op}/{name}: fn must be callable")
+        if not callable(predicate):
+            raise RegistryError(f"{op}/{name}: predicate must be callable")
+        ops = self._impls.setdefault(op, {})
+        if name in ops:
+            raise RegistryError(f"{op}/{name}: already registered")
+        impl = KernelImpl(op=op, name=name, fn=fn, oracle=oracle,
+                          predicate=predicate, priority=priority,
+                          native=tuple(native),
+                          takes_interpret=takes_interpret)
+        ops[name] = impl
+        return impl
+
+    # -- introspection --------------------------------------------------
+    def ops(self) -> tuple[str, ...]:
+        return tuple(sorted(self._impls))
+
+    def impls(self, op: str) -> tuple[KernelImpl, ...]:
+        try:
+            fam = self._impls[op]
+        except KeyError:
+            raise RegistryError(f"unknown kernel op {op!r}") from None
+        return tuple(fam[n] for n in sorted(fam))
+
+    def get(self, op: str, name: str) -> KernelImpl:
+        fam = self._impls.get(op, {})
+        if name not in fam:
+            raise RegistryError(
+                f"{op!r} has no implementation named {name!r} "
+                f"(registered: {sorted(fam)})")
+        return fam[name]
+
+    def matrix(self) -> list[tuple[str, str]]:
+        """Every (op, impl name) pair -- the conformance-matrix axis."""
+        return [(op, impl.name) for op in self.ops()
+                for impl in self.impls(op)]
+
+    # -- completeness contract ------------------------------------------
+    def check(self) -> None:
+        """The CI completeness gate: every op has >= 2 implementations,
+        every op has the jnp reference fallback, and (enforced at register
+        time, re-asserted here) every impl carries a callable oracle."""
+        problems = []
+        for op in self.ops():
+            fam = self.impls(op)
+            if len(fam) < 2:
+                problems.append(f"{op}: only {len(fam)} implementation(s); "
+                                f"need >= 2 (a native tier and a fallback)")
+            if JNP_REF not in {i.name for i in fam}:
+                problems.append(f"{op}: missing the {JNP_REF} fallback")
+            for impl in fam:
+                if not callable(impl.oracle):
+                    problems.append(f"{op}/{impl.name}: oracle not callable")
+        if problems:
+            raise RegistryError("kernel registry incomplete:\n  "
+                                + "\n  ".join(problems))
+
+    # -- forcing --------------------------------------------------------
+    @contextlib.contextmanager
+    def force(self, name: str, op: str = "*"):
+        """Pin auto dispatch of ``op`` (or every op) to impl ``name``."""
+        prev = self._forced.get(op)
+        self._forced[op] = name
+        try:
+            yield
+        finally:
+            if prev is None:
+                self._forced.pop(op, None)
+            else:
+                self._forced[op] = prev
+
+    def _env_forced(self) -> dict[str, str]:
+        spec = os.environ.get(FORCE_ENV)
+        cached_spec, cached = self._env_cache
+        if spec != cached_spec:
+            cached = _parse_force(spec) if spec else {}
+            self._env_cache = (spec, cached)
+        return cached
+
+    def forced_name(self, op: str) -> str | None:
+        """The forced impl name for ``op``, if any (context manager wins
+        over the environment; per-op entries win over ``*``)."""
+        for source in (self._forced, self._env_forced()):
+            name = source.get(op, source.get("*"))
+            if name is not None:
+                return name
+        return None
+
+    # -- resolution -----------------------------------------------------
+    def resolve(self, op: str, platform: str | None = None) -> KernelImpl:
+        """The fastest implementation for this backend: a forced name if
+        one is registered for the op, else highest priority among impls
+        whose platform predicate holds (ties break lexicographically)."""
+        if platform is None:
+            platform = jax.default_backend()
+        fam = self._impls.get(op)
+        if not fam:
+            raise RegistryError(f"unknown kernel op {op!r}")
+        forced = self.forced_name(op)
+        if forced is not None and forced in fam:
+            return fam[forced]
+        best = None
+        for impl in fam.values():
+            if not impl.available(platform):
+                continue
+            if best is None or (impl.priority, impl.name) > (best.priority,
+                                                             best.name):
+                best = impl
+        if best is None:
+            raise RegistryError(
+                f"{op!r}: no implementation available on platform "
+                f"{platform!r} (registered: {sorted(fam)})")
+        return best
+
+    def resolution(self, platform: str | None = None) -> dict[str, str]:
+        """op -> resolved impl name for this backend (what benchmarks
+        record next to their rows)."""
+        return {op: self.resolve(op, platform).name for op in self.ops()}
+
+
+_REGISTRY = KernelRegistry()
+
+
+def kernel_registry() -> KernelRegistry:
+    """The process-global registry, populated by ``kernels.ops`` at
+    import (importing ops is what fills it)."""
+    return _REGISTRY

@@ -29,6 +29,7 @@ import time
 
 import jax
 
+from repro import platform as repro_platform
 from repro.core.sjpc import SJPCConfig, SJPCState
 from repro.obs import (AccuracyAuditor, Observability, Tracer,
                        default_registry, default_tracer)
@@ -44,6 +45,10 @@ _DEFAULT_WINDOW = object()       # "use ServiceConfig.window_epochs" sentinel
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
+    platform: str = "auto"           # backend bootstrap (repro.platform):
+                                     # "auto" = trust jax's accelerator
+                                     # preference; "cpu"/"gpu"/"tpu" pins it
+                                     # (effective only before jax init)
     batch_rows: int = 256            # ingest round size per stream
     window_epochs: int | None = 8    # default; per-stream override at create
     auto_flush_rows: int | None = None   # flush() when a group's backlog hits this
@@ -77,6 +82,7 @@ class EstimationService:
     def __init__(self, cfg: ServiceConfig = ServiceConfig(), *,
                  obs: Observability | None = None):
         self.cfg = cfg
+        self.platform = repro_platform.bootstrap(cfg.platform)
         if obs is None:
             obs = self._build_obs(cfg)
         if cfg.audit_rate > 0.0 and obs.auditor is None:

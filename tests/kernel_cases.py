@@ -1,0 +1,226 @@
+"""Shared kernel-conformance case grids and input builders.
+
+One module owns the hand-enumerated shape/depth/width/empty edge lists that
+used to be copy-pasted across ``test_fused_ingest.py`` /
+``test_fused_query.py`` / ``test_fused_pairs.py``; those files now consume
+these builders, and ``test_kernel_registry.py`` assembles the same grids
+into the registry-generated conformance matrix (one case per
+(op, registered impl) pair).  Canonical-argument convention: every builder
+returns the *oracle's* positional arguments; :func:`entry_call` adapts them
+to the public ``kernels.ops`` entry point so matrix cases exercise the real
+dispatch layer with ``impl=`` forced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import sjpc
+from repro.core import sketch as sk
+from repro.core.hashing import P31
+from repro.core.projections import padded_lattice
+from repro.core.sjpc import SJPCConfig
+from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# fused_pairs
+# ---------------------------------------------------------------------------
+
+PAIRS_SHAPES = [
+    (1, 1, 3),      # single record: no pairs
+    (1, 7, 3),      # smaller than any tile
+    (2, 64, 5),
+    (1, 130, 6),    # tile remainder (128 + 2)
+    (3, 33, 4),
+    (1, 256, 2),    # exact multiple of the tile
+]
+PAIRS_BLOCKS = [8, 32, 128]
+
+
+def pairs_case(rng, N, R, d, vocab=5, p_valid=0.8):
+    items = rng.integers(0, vocab, size=(N, R, d)).astype(np.uint32)
+    valid = (rng.random((N, R)) < p_valid).astype(np.int32)
+    return items, valid
+
+
+# ---------------------------------------------------------------------------
+# fused_query
+# ---------------------------------------------------------------------------
+
+QUERY_DEPTHS = [1, 3, 5]
+QUERY_SHAPES = [              # (N, L, w, block_w)
+    (1, 1, 128, 128),         # single plane, one tile
+    (3, 2, 256, 64),          # multi-tile width
+    (2, 4, 512, 512),         # w >> t (non-square planes)
+    (5, 3, 128, 32),          # many streams, many tiles
+]
+
+
+def counter_stack(rng, N, L, t, w, lo=-60, hi=60):
+    return jnp.asarray(rng.integers(lo, hi, size=(N, L, t, w))
+                       .astype(np.int32))
+
+
+def oracle_moments(a, b):
+    return (np.asarray(a, np.int64) * np.asarray(b, np.int64)).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# fused_ingest
+# ---------------------------------------------------------------------------
+
+INGEST_BATCHES = [1, 17, 100, 257]       # non-pow2 tails included
+INGEST_DEPTHS = [1, 3, 5]
+INGEST_TILES = [(16, 128), (64, 256), (256, 512)]   # (block_b, block_w)
+
+
+def ingest_inputs(rng, cfg, batch):
+    """Padded-lattice ingest arguments (the fused kernel's canonical args)
+    with random counters, values, and {0,1} weights zeroed on padded combo
+    slots.  Returns (params, pad, args)."""
+    params, _state = sjpc.init(cfg)
+    pad = padded_lattice(cfg.d, cfg.s)
+    values = rng.integers(0, 2**32, size=(batch, cfg.d), dtype=np.uint32)
+    weights = (rng.integers(0, 2, size=(batch, pad.num_levels, pad.m_max))
+               .astype(np.int32) * pad.valid[None].astype(np.int32))
+    counters = rng.integers(-9, 9,
+                            size=(cfg.num_levels, cfg.depth, cfg.width)
+                            ).astype(np.int32)
+    return params, pad, (jnp.asarray(counters), jnp.asarray(values),
+                         jnp.asarray(pad.masks), jnp.asarray(pad.ids),
+                         params.fp_bases, params.bucket_coeffs,
+                         params.sign_coeffs, jnp.asarray(weights))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint / sketch_update / sketch_moments / flash_attention
+# ---------------------------------------------------------------------------
+
+def fingerprint_case(rng, B, d, s, level=0):
+    """One level's (values, combo_masks, combo_ids, bases)."""
+    cfg = SJPCConfig(d=d, s=s, width=128, depth=1,
+                     seed=int(rng.integers(1 << 16)))
+    params, _ = sjpc.init(cfg)
+    pad = padded_lattice(d, s)
+    values = jnp.asarray(rng.integers(0, 2**32, size=(B, d),
+                                      dtype=np.uint32))
+    return (values, jnp.asarray(pad.masks[level]),
+            jnp.asarray(pad.ids[level]), params.fp_bases)
+
+
+def sketch_update_case(rng, n, t, w, all_zero_weights=False):
+    params = sk.make_sketch_params(rng, t)
+    fp1 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+    fp2 = jnp.asarray(rng.integers(0, int(P31), size=n, dtype=np.uint32))
+    weights = jnp.zeros((n,), jnp.int32) if all_zero_weights \
+        else jnp.asarray(rng.integers(-2, 3, size=n).astype(np.int32))
+    counters = jnp.asarray(rng.integers(-9, 9, size=(t, w)).astype(np.int32))
+    return (counters, fp1, fp2, params.bucket_coeffs, params.sign_coeffs,
+            weights)
+
+
+def flash_case(rng, B, S, H, hd):
+    def t(shape):
+        return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    return t((B, S, H, hd)), t((B, S, H, hd)), t((B, S, H, hd))
+
+
+# ---------------------------------------------------------------------------
+# the registry conformance matrix
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One conformance input: canonical (oracle-signature) args plus the
+    kwargs both sides share (e.g. flash attention's causal flag)."""
+    op: str
+    case_id: str
+    args: tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    entry_kwargs: dict = dataclasses.field(default_factory=dict)  # ops-only
+    tol: float | None = None     # None = bit-exact (the integer kernels)
+
+    @property
+    def id(self) -> str:
+        return f"{self.op}-{self.case_id}"
+
+
+def entry_call(case: KernelCase, impl: str, interpret=None):
+    """Run one case through the public ops entry point with ``impl``
+    forced -- the same dispatch layer the service uses."""
+    kw = dict(case.kwargs, **case.entry_kwargs,
+              impl=impl, interpret=interpret)
+    if case.op == "sketch_update":
+        counters, fp1, fp2, bc, sc, weights = case.args
+        params = types.SimpleNamespace(bucket_coeffs=bc, sign_coeffs=sc)
+        return ops.sketch_update(counters, fp1, fp2, params, weights, **kw)
+    return getattr(ops, case.op)(*case.args, **kw)
+
+
+def oracle_call(case: KernelCase, oracle: Callable):
+    return oracle(*case.args, **case.kwargs)
+
+
+def matrix_cases():
+    """The shape/depth/empty edge grid behind the (op, impl) matrix.
+
+    Each op gets a handful of cases spanning: below-tile shapes, tile
+    remainders, exact tile multiples, depth extremes, and the empty /
+    all-masked edges.  Shapes stay small -- the matrix multiplies every
+    case by every registered impl, and the interpreter tier is slow."""
+    rng = np.random.default_rng(20240808)
+    cases = []
+
+    for i, (N, R, d) in enumerate([(1, 1, 3), (2, 64, 5), (1, 130, 6)]):
+        cases.append(KernelCase("fused_pairs", f"N{N}R{R}d{d}",
+                                pairs_case(rng, N, R, d)))
+    items, _ = pairs_case(rng, 2, 40, 4)
+    cases.append(KernelCase("fused_pairs", "all-invalid",
+                            (items, np.zeros((2, 40), np.int32))))
+    cases.append(KernelCase("fused_pairs", "duplicates-diagonal",
+                            (np.full((1, 50, 4), 7, np.uint32),
+                             np.ones((1, 50), np.int32))))
+
+    for N, L, t, w in [(1, 1, 1, 128), (3, 2, 3, 256), (2, 4, 5, 512)]:
+        cases.append(KernelCase("fused_query", f"N{N}L{L}t{t}w{w}",
+                                (counter_stack(rng, N, L, t, w),
+                                 counter_stack(rng, N, L, t, w))))
+    zeros = jnp.zeros((2, 3, 3, 128), jnp.int32)
+    cases.append(KernelCase("fused_query", "empty-sketch", (zeros, zeros)))
+
+    for batch, depth in [(1, 2), (33, 2), (50, 3)]:
+        cfg = SJPCConfig(d=4, s=2, width=256, depth=depth, seed=7 + batch)
+        _, _, args = ingest_inputs(rng, cfg, batch)
+        cases.append(KernelCase("fused_ingest", f"B{batch}t{depth}", args))
+
+    for B, d, s in [(1, 4, 2), (37, 5, 3), (130, 6, 4)]:
+        cases.append(KernelCase("fingerprint", f"B{B}d{d}s{s}",
+                                fingerprint_case(rng, B, d, s)))
+
+    for n, t, w in [(1, 3, 128), (257, 3, 256), (1024, 5, 512)]:
+        cases.append(KernelCase("sketch_update", f"n{n}t{t}w{w}",
+                                sketch_update_case(rng, n, t, w)))
+    cases.append(KernelCase("sketch_update", "zero-weights",
+                            sketch_update_case(rng, 64, 2, 128,
+                                               all_zero_weights=True)))
+
+    for t, w in [(1, 128), (3, 256), (5, 512)]:
+        a = counter_stack(rng, 1, 1, t, w)[0, 0]
+        b = counter_stack(rng, 1, 1, t, w)[0, 0]
+        cases.append(KernelCase("sketch_moments", f"t{t}w{w}", (a, b)))
+
+    for causal in (True, False):
+        cases.append(KernelCase(
+            "flash_attention", f"causal{int(causal)}",
+            flash_case(rng, 2, 64, 2, 16),
+            kwargs={"causal": causal, "block_q": 32, "block_k": 32},
+            tol=2e-5))
+    return cases
+
+
+def cases_for(op: str):
+    return [c for c in matrix_cases() if c.op == op]

@@ -14,29 +14,19 @@ from repro.core.sjpc import SJPCConfig
 from repro.kernels import ops, ref
 from repro.kernels.fused_ingest import fused_ingest_pallas
 
+# batch/depth/tile grids and the padded-lattice input builder are shared
+# with the registry conformance matrix (kernel_cases.py)
+from kernel_cases import (INGEST_BATCHES, INGEST_DEPTHS, INGEST_TILES,
+                          ingest_inputs as _inputs)
+
 
 @pytest.fixture(scope="module")
 def rng():
     return np.random.default_rng(777)
 
 
-def _inputs(rng, cfg, batch):
-    params, state = sjpc.init(cfg)
-    pad = padded_lattice(cfg.d, cfg.s)
-    values = rng.integers(0, 2**32, size=(batch, cfg.d), dtype=np.uint32)
-    weights = (rng.integers(0, 2, size=(batch, pad.num_levels, pad.m_max))
-               .astype(np.int32) * pad.valid[None].astype(np.int32))
-    counters = rng.integers(-9, 9,
-                            size=(cfg.num_levels, cfg.depth, cfg.width)
-                            ).astype(np.int32)
-    return params, pad, (jnp.asarray(counters), jnp.asarray(values),
-                         jnp.asarray(pad.masks), jnp.asarray(pad.ids),
-                         params.fp_bases, params.bucket_coeffs,
-                         params.sign_coeffs, jnp.asarray(weights))
-
-
 class TestFusedKernelConformance:
-    @pytest.mark.parametrize("batch", [1, 17, 100, 257])
+    @pytest.mark.parametrize("batch", INGEST_BATCHES)
     def test_batch_remainders(self, rng, batch):
         """Non-power-of-two batches exercise the zero-padded tail block."""
         cfg = SJPCConfig(d=5, s=3, width=256, depth=2, seed=3)
@@ -45,7 +35,7 @@ class TestFusedKernelConformance:
         want = ref.fused_ingest_ref(*args)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
-    @pytest.mark.parametrize("depth", [1, 3, 5])
+    @pytest.mark.parametrize("depth", INGEST_DEPTHS)
     def test_depths(self, rng, depth):
         cfg = SJPCConfig(d=4, s=2, width=256, depth=depth, seed=4)
         _, _, args = _inputs(rng, cfg, 50)
@@ -53,7 +43,7 @@ class TestFusedKernelConformance:
         want = ref.fused_ingest_ref(*args)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
-    @pytest.mark.parametrize("block_b,block_w", [(16, 128), (64, 256), (256, 512)])
+    @pytest.mark.parametrize("block_b,block_w", INGEST_TILES)
     def test_width_tiles(self, rng, block_b, block_w):
         """Counters tiled along width: every tile accumulates independently
         and the global bucket id is recovered from the tile offset."""

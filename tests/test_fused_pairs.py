@@ -20,6 +20,10 @@ from repro.kernels import ref
 from repro.kernels.fused_pairs import fused_pairs_pallas
 from repro.kernels.ops import fused_pairs
 
+# the shape grid and input builder live in kernel_cases.py, shared with the
+# registry conformance matrix (test_kernel_registry.py)
+from kernel_cases import PAIRS_BLOCKS, PAIRS_SHAPES, pairs_case as _case
+
 
 def _oracle(items, valid):
     out = []
@@ -30,21 +34,8 @@ def _oracle(items, valid):
     return np.stack(out).astype(np.int64)
 
 
-def _case(rng, N, R, d, vocab=5, p_valid=0.8):
-    items = rng.integers(0, vocab, size=(N, R, d)).astype(np.uint32)
-    valid = (rng.random((N, R)) < p_valid).astype(np.int32)
-    return items, valid
-
-
 class TestConformance:
-    @pytest.mark.parametrize("N,R,d", [
-        (1, 1, 3),      # single record: no pairs
-        (1, 7, 3),      # smaller than any tile
-        (2, 64, 5),
-        (1, 130, 6),    # tile remainder (128 + 2)
-        (3, 33, 4),
-        (1, 256, 2),    # exact multiple of the tile
-    ])
+    @pytest.mark.parametrize("N,R,d", PAIRS_SHAPES)
     def test_ref_and_pallas_match_oracle(self, N, R, d):
         rng = np.random.default_rng(N * 1000 + R * 10 + d)
         items, valid = _case(rng, N, R, d)
@@ -55,7 +46,7 @@ class TestConformance:
         np.testing.assert_array_equal(got_ref, want)
         np.testing.assert_array_equal(got_pal, want)
 
-    @pytest.mark.parametrize("block_r", [8, 32, 128])
+    @pytest.mark.parametrize("block_r", PAIRS_BLOCKS)
     def test_tile_shape_irrelevant(self, block_r):
         rng = np.random.default_rng(3)
         items, valid = _case(rng, 2, 100, 5)

@@ -24,23 +24,16 @@ from repro.kernels.fused_query import fused_query_pallas
 from repro.kernels.ops import fused_query
 from repro.service import EstimationService, QueryEngine, ServiceConfig
 
-
-def _counter_stack(rng, N, L, t, w, lo=-60, hi=60):
-    return jnp.asarray(rng.integers(lo, hi, size=(N, L, t, w)).astype(np.int32))
-
-
-def _oracle_moments(a, b):
-    return (np.asarray(a, np.int64) * np.asarray(b, np.int64)).sum(axis=-1)
+# shape/depth grids and builders shared with the registry conformance
+# matrix (kernel_cases.py / test_kernel_registry.py)
+from kernel_cases import (QUERY_DEPTHS, QUERY_SHAPES,
+                          counter_stack as _counter_stack,
+                          oracle_moments as _oracle_moments)
 
 
 class TestKernelConformance:
-    @pytest.mark.parametrize("depth", [1, 3, 5])
-    @pytest.mark.parametrize("N,L,w,block_w", [
-        (1, 1, 128, 128),      # single plane, one tile
-        (3, 2, 256, 64),       # multi-tile width
-        (2, 4, 512, 512),      # w >> t (non-square planes)
-        (5, 3, 128, 32),       # many streams, many tiles
-    ])
+    @pytest.mark.parametrize("depth", QUERY_DEPTHS)
+    @pytest.mark.parametrize("N,L,w,block_w", QUERY_SHAPES)
     def test_moments_match_int64_oracle(self, depth, N, L, w, block_w):
         rng = np.random.default_rng(depth * 1000 + N * 100 + w)
         a = _counter_stack(rng, N, L, depth, w)
@@ -50,7 +43,7 @@ class TestKernelConformance:
         np.testing.assert_array_equal(np.asarray(out),
                                       _oracle_moments(a, b).astype(np.float64))
 
-    @pytest.mark.parametrize("depth", [1, 3, 5])
+    @pytest.mark.parametrize("depth", QUERY_DEPTHS)
     def test_pallas_bit_identical_to_jnp_fallback(self, depth):
         rng = np.random.default_rng(77 + depth)
         a = _counter_stack(rng, 4, 3, depth, 256)
@@ -85,7 +78,7 @@ class TestBatchEstimator:
             states.append(st)
         return states
 
-    @pytest.mark.parametrize("depth", [1, 3, 5])
+    @pytest.mark.parametrize("depth", QUERY_DEPTHS)
     def test_estimate_batch_matches_per_stream_reference(self, depth):
         cfg = SJPCConfig(d=5, s=3, ratio=0.5, width=256, depth=depth, seed=41)
         states = self._states(cfg, [0, 1, 3, 5])     # includes an EMPTY sketch

@@ -491,9 +491,11 @@ class TestGlobalInstrumentation:
                               None, use_pallas=False)
             sketch_moments(c, use_pallas=False)
             assert fresh.counter("kernel_dispatch_total",
-                                 kernel="sketch_update", path="jnp") == 1.0
+                                 kernel="sketch_update", path="jnp",
+                                 impl="jnp_ref") == 1.0
             assert fresh.counter("kernel_dispatch_total",
-                                 kernel="sketch_moments", path="jnp") == 1.0
+                                 kernel="sketch_moments", path="jnp",
+                                 impl="jnp_ref") == 1.0
         finally:
             set_default_registry(prev)
 
