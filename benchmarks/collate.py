@@ -257,6 +257,48 @@ def equal_space_table(res):
     return "\n".join(out)
 
 
+def distributed_table(res):
+    """The `distributed` suite: aggregate ingest scale-out at 1/2/4
+    workers with merge latency and replica freshness.  Tolerant by
+    construction -- any subset of worker counts renders (a partial or
+    interrupted run still collates), missing fields print as `-`, and
+    rows sort by worker count so reruns diff cleanly."""
+    dist = res.get("distributed")
+    if not isinstance(dist, dict) or not dist:
+        return ""
+    rows = sorted(
+        ((key, row) for key, row in dist.items()
+         if key.startswith("workers_") and isinstance(row, dict)),
+        key=lambda kv: int(kv[1].get("workers", 0)))
+    if not rows:
+        return ""
+    out = ["#### Distributed — multi-worker ingest scale-out\n",
+           "| workers | records | rec/s | speedup | merge p50 ms "
+           "| merge p95 ms | freshness p95 ms |",
+           "|---|---|---|---|---|---|---|"]
+
+    def _ms(row, key):
+        v = row.get(key)
+        return f"{1e3 * float(v):.2f}" if v is not None else "-"
+
+    for key, row in rows:
+        rps = row.get("rec_per_s")
+        sp = row.get("speedup_vs_1w")
+        out.append(
+            f"| {row.get('workers', '-')} | {row.get('records', '-')} "
+            + (f"| {float(rps):,.0f} " if rps is not None else "| - ")
+            + (f"| {float(sp):.2f}x " if sp is not None else "| - ")
+            + f"| {_ms(row, 'merge_p50_s')} | {_ms(row, 'merge_p95_s')} "
+            f"| {_ms(row, 'freshness_p95_s')} |")
+    budgets = [row for _, row in rows if row.get("merge_budget_s") is not None]
+    if budgets:
+        ok = all(row.get("merge_within_budget", False) for row in budgets)
+        out.append(f"\nmerge p95 within the "
+                   f"{float(budgets[0]['merge_budget_s']):.1f}s per-epoch "
+                   f"budget at every worker count: {'yes' if ok else 'NO'}")
+    return "\n".join(out)
+
+
 def paper_tables(results_path):
     """Markdown for whatever suites are present in results.json.
 
@@ -320,6 +362,9 @@ def paper_tables(results_path):
     eq = equal_space_table(res)
     if eq:
         out.append("\n" + eq)
+    dist = distributed_table(res)
+    if dist:
+        out.append("\n" + dist)
     return "\n".join(out)
 
 

@@ -3,7 +3,7 @@
 Default (no args) runs the paper benchmarks + the kernel micro-bench and
 collates any dry-run roofline JSONs under benchmarks/out/dryrun into the
 roofline summary table.  Individual benchmarks: table3 fig4_6 fig8 fig9a
-fig9b fig9c fig10 kernels service equal_space roofline.
+fig9b fig9c fig10 kernels service equal_space distributed roofline.
 """
 from __future__ import annotations
 
@@ -531,6 +531,23 @@ def bench_equal_space():
     return out
 
 
+def bench_distributed():
+    """Multi-worker ingest scale-out (DESIGN.md §18.5): the same workload
+    through 1/2/4 subprocess-worker clusters; rows carry aggregate ingest
+    rec/s, speedup vs the 1-worker baseline, merge p50/p95 latency, and
+    replica query-freshness lag.  Worker environments are pinned
+    identically (one forced host device, capped threads) so the ratios
+    measure tenant sharding, not thread-count drift.  The merge-latency
+    trace of the 2-worker smoke run lands next to results.json for
+    artifact upload."""
+    from repro.distributed import harness
+    smoke = harness.run_smoke(os.path.join(OUT_DIR, "distributed_smoke.json"))
+    out = harness.run_scaleout((1, 2, 4))
+    out["smoke"] = {k: smoke[k] for k in
+                    ("linear_exact", "worst_rel_err", "records")}
+    return out
+
+
 def bench_roofline():
     """Collate dry-run JSONs into the roofline summary table."""
     d = os.path.join(OUT_DIR, "dryrun")
@@ -570,7 +587,7 @@ def main(argv):
     from benchmarks import paper_benchmarks as PB
     names = argv or (list(PB.ALL)
                      + ["kernels", "service", "planner", "equal_space",
-                        "roofline"])
+                        "distributed", "roofline"])
     results_path = os.path.join(OUT_DIR, "results.json")
     # merge into prior results so a partial run (e.g. `run service`) never
     # drops the other suites' rows from the collated report
@@ -592,6 +609,8 @@ def main(argv):
             results[name] = bench_planner()
         elif name == "equal_space":
             results[name] = bench_equal_space()
+        elif name == "distributed":
+            results[name] = bench_distributed()
         elif name == "roofline":
             results[name] = bench_roofline()
         else:

@@ -1,0 +1,320 @@
+"""Scale-out harness: 1/2/4-worker clusters vs the single-process oracle.
+
+Two jobs (DESIGN.md §18.5):
+
+* **Benchmark** (:func:`run_scaleout`, surfaced as the ``distributed``
+  suite in benchmarks/run.py): launch N subprocess workers, drive
+  identical ingest through the coordinator, and report aggregate ingest
+  records/sec, merge latency p50/p95, and replica query-freshness lag
+  per worker count.  Worker environments are pinned identically
+  (single forced host device, capped BLAS/OMP threads) so the scaling
+  ratio measures sharding, not accidental thread-count differences.
+
+* **Smoke/correctness** (:func:`run_smoke`, the CI ``distributed-smoke``
+  job and the slow-lane subprocess test): a 2-worker cluster over a
+  small geometry whose coordinator estimates must match a single-process
+  oracle run -- bit-exact replica counters for linear kinds, |Δ|/max ≤
+  1e-6 on every estimate -- plus a merge-latency trace written under
+  ``benchmarks/out/`` for artifact upload.
+
+Determinism contract: tenant uids are pinned globally (spec declaration
+order), per-stream record sequences are identical, and the harness
+flushes on the same per-cycle boundaries in both runs, so the per-
+(stream, round) ingest PRNG grid -- and therefore every sketch -- is
+reproduced exactly regardless of which process ingested the records.
+Tenant names are salted at spec-build time so ``crc32 % 4`` (and hence
+``% 2``) is perfectly balanced: the 1/2/4-worker runs shard the same
+tenants evenly, keeping the scaling comparison honest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+import zlib
+
+import numpy as np
+
+from .coordinator import ClusterSpec, Coordinator, LocalWorker, SubprocessWorker
+
+_SRC = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# threads pinned identically for every worker count: the scale-out ratio
+# must come from sharding, not from 1-worker runs grabbing more BLAS/OMP
+# threads than 4-worker runs
+_THREAD_CAPS = {"OMP_NUM_THREADS": "1", "OPENBLAS_NUM_THREADS": "1",
+                "MKL_NUM_THREADS": "1"}
+
+
+def worker_env() -> dict:
+    """The pinned child environment: one forced host device
+    (``repro.platform.subprocess_env``), CPU backend, capped threads,
+    and a PYTHONPATH that reaches ``repro``."""
+    from repro.platform import subprocess_env
+    env = subprocess_env(1)
+    env.update(_THREAD_CAPS)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _salted(i: int, want: int) -> str:
+    """A tenant name whose crc32 lands in shard ``want`` mod 4 (balanced
+    for 2- and 4-worker clusters alike)."""
+    salt = 0
+    while True:
+        name = f"tenant-{i:02d}x{salt}"
+        if zlib.crc32(name.encode()) % 4 == want:
+            return name
+        salt += 1
+
+
+def make_spec(n_tenants: int = 8, *, kinds=("sjpc",), d: int = 6, s: int = 4,
+              width: int = 1024, depth: int = 3, seed: int = 11,
+              window_epochs: int = 4, backing_epochs: int = 0,
+              batch_rows: int = 256) -> ClusterSpec:
+    """A balanced cluster spec: ``n_tenants`` streams cycling through
+    ``kinds``, names salted so every worker count shards them evenly."""
+    from repro.core.sjpc import SJPCConfig
+    streams = []
+    for i in range(n_tenants):
+        kind = kinds[i % len(kinds)]
+        st = {"name": _salted(i, i % 4), "group": "g",
+              "window_epochs": window_epochs, "estimator": kind}
+        if backing_epochs and kind != "sjpc":
+            st["backing_epochs"] = backing_epochs
+        streams.append(st)
+    return ClusterSpec(
+        groups=(("g", SJPCConfig(d=d, s=s, ratio=0.5, width=width,
+                                 depth=depth, seed=seed)),),
+        streams=tuple(streams),
+        service={"batch_rows": batch_rows, "window_epochs": window_epochs,
+                 "platform": "cpu"})
+
+
+def make_batches(spec: ClusterSpec, *, cycles: int, rows_per_cycle: int,
+                 vocab: int = 400, seed: int = 0) -> dict:
+    """Per-tenant record batches, one array per (tenant, cycle).  The
+    same dict feeds the oracle and every cluster size, so the per-stream
+    sequences -- and the PRNG round grid -- are identical everywhere."""
+    d = spec.groups[0][1].d
+    rng = np.random.default_rng(seed)
+    return {s["name"]: [rng.integers(0, vocab, size=(rows_per_cycle, d),
+                                     dtype=np.uint32) for _ in range(cycles)]
+            for s in spec.streams}
+
+
+# -- the oracle -------------------------------------------------------------
+
+def run_oracle(spec: ClusterSpec, batches: dict, *, cycles: int):
+    """The single-process reference: same topology (dense uids ==
+    declaration order == the cluster's pinned uids), same records, same
+    flush and epoch boundaries."""
+    from repro.obs import Observability
+    from repro.service import EstimationService, ServiceConfig
+    svc = EstimationService(ServiceConfig(**spec.service),
+                            obs=Observability.disabled())
+    for gid, cfg in spec.groups:
+        svc.create_group(gid, cfg)
+    for st in spec.streams:
+        kwargs = {k: st[k] for k in
+                  ("window_epochs", "estimator", "backing_epochs")
+                  if k in st}
+        svc.create_stream(st["name"], st["group"], **kwargs)
+    for c in range(cycles):
+        for st in spec.streams:
+            svc.ingest(st["name"], batches[st["name"]][c])
+        svc.flush()
+        svc.advance_epoch()
+    return svc
+
+
+# -- cluster runs -----------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusterRun:
+    n_workers: int
+    records: int
+    ingest_s: float              # route + flush + merge wall time
+    rec_per_s: float
+    merge_p50_s: float
+    merge_p95_s: float
+    freshness_p50_s: float
+    freshness_p95_s: float
+    sync_trace: list             # per-cycle {"cycle", "sync_s", "deltas"}
+    coordinator: Coordinator
+
+
+def run_cluster(spec: ClusterSpec, batches: dict, *, n_workers: int,
+                cycles: int, local: bool = False,
+                keep_open: bool = False) -> ClusterRun:
+    """Drive one cluster through ``cycles`` ingest/sync/advance rounds.
+    ``local=True`` uses in-process workers (unit tests: full protocol
+    bytes, no subprocess startup); otherwise each worker is a child
+    process with a pinned environment."""
+    if local:
+        workers = [LocalWorker() for _ in range(n_workers)]
+    else:
+        env = worker_env()
+        workers = [SubprocessWorker(env=env) for _ in range(n_workers)]
+    coord = Coordinator(spec, workers)
+    # jit compilation lands inside cycle 0 on every worker -- it overlaps
+    # across workers (send-all-then-recv-all broadcasts), so the wall
+    # clock charges each cluster size comparably
+    records = 0
+    trace = []
+    t0 = time.perf_counter()
+    for c in range(cycles):
+        for st in spec.streams:
+            records += coord.ingest(st["name"], batches[st["name"]][c])
+        ts = time.perf_counter()
+        stats = coord.sync()
+        trace.append({"cycle": c, "sync_s": time.perf_counter() - ts,
+                      "deltas": stats["deltas"],
+                      "heartbeats": stats["heartbeats"]})
+        coord.advance_epoch()
+    wall = time.perf_counter() - t0
+    m = coord.obs.metrics
+    run = ClusterRun(
+        n_workers=n_workers, records=records, ingest_s=wall,
+        rec_per_s=records / wall if wall > 0 else 0.0,
+        merge_p50_s=_hist_quantile(m, "coordinator_merge_seconds", 0.50),
+        merge_p95_s=_hist_quantile(m, "coordinator_merge_seconds", 0.95),
+        freshness_p50_s=m.quantile("coordinator_freshness_lag_seconds", 0.50),
+        freshness_p95_s=m.quantile("coordinator_freshness_lag_seconds", 0.95),
+        sync_trace=trace, coordinator=coord)
+    if not keep_open:
+        coord.close()
+    return run
+
+
+def _hist_quantile(m, name: str, q: float) -> float:
+    """Worst worker's quantile (the family is labeled ``worker=<i>``)."""
+    hists = getattr(m, "_hists", {}).get(name, {})
+    vals = [h.quantile(q) for h in hists.values()]
+    return max(vals) if vals else 0.0
+
+
+# -- correctness ------------------------------------------------------------
+
+def compare_to_oracle(coord: Coordinator, oracle, spec: ClusterSpec) -> dict:
+    """Replica-vs-oracle agreement: bit-exact counters/n for linear
+    kinds, worst relative estimate gap across all tenants and kinds."""
+    import jax.tree_util as jtu
+    replica = coord.replicas[0]
+    worst = 0.0
+    linear_exact = True
+    for st in spec.streams:
+        name = st["name"]
+        rw = replica.registry.stream(name)
+        ow = oracle.registry.stream(name)
+        if rw.estimator.linear:
+            a, b = rw.window.total, ow.window.total
+            # step is worker-local PRNG history: the replica mirrors data
+            # (counters, n), not the fold count
+            if not (np.array_equal(np.asarray(a.counters), np.asarray(b.counters))
+                    and np.array_equal(np.asarray(a.n), np.asarray(b.n))):
+                linear_exact = False
+        else:
+            for la, lb in zip(jtu.tree_leaves(rw.window.window_state()),
+                              jtu.tree_leaves(ow.window.window_state())):
+                if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                    linear_exact = False
+        est_c = coord.self_join(name).estimate
+        est_o = oracle.snapshot([name]).self_join(name).estimate
+        denom = max(abs(est_o), 1.0)
+        worst = max(worst, abs(est_c - est_o) / denom)
+    return {"linear_exact": linear_exact, "worst_rel_err": worst}
+
+
+def run_smoke(out_path: str | None = None, *, local: bool = False) -> dict:
+    """The CI smoke run: a 2-worker cluster (subprocess by default) over
+    a small mixed-kind geometry; asserts coordinator == oracle and writes
+    the merge-latency trace."""
+    spec = make_spec(4, kinds=("sjpc", "reservoir"), width=256, depth=2,
+                     window_epochs=3, batch_rows=64)
+    cycles = 4
+    batches = make_batches(spec, cycles=cycles, rows_per_cycle=128, seed=3)
+    run = run_cluster(spec, batches, n_workers=2, cycles=cycles,
+                      local=local, keep_open=True)
+    try:
+        oracle = run_oracle(spec, batches, cycles=cycles)
+        agree = compare_to_oracle(run.coordinator, oracle, spec)
+    finally:
+        run.coordinator.close()
+    report = {
+        "workers": 2, "records": run.records,
+        "rec_per_s": run.rec_per_s,
+        "merge_p50_s": run.merge_p50_s, "merge_p95_s": run.merge_p95_s,
+        "freshness_p95_s": run.freshness_p95_s,
+        "sync_trace": run.sync_trace, **agree,
+    }
+    assert agree["linear_exact"], "linear replica state diverged from oracle"
+    assert agree["worst_rel_err"] <= 1e-6, (
+        f"coordinator estimates diverged: {agree['worst_rel_err']:.3e}")
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"smoke report -> {out_path}")
+    return report
+
+
+def run_scaleout(worker_counts=(1, 2, 4), *, n_tenants: int = 8,
+                 cycles: int = 6, rows_per_cycle: int = 2048,
+                 width: int = 1024, merge_budget_s: float = 1.0) -> dict:
+    """The ``distributed`` benchmark suite: the same workload through
+    1/2/4-worker clusters; rows keyed ``workers_{N}`` with speedup vs the
+    1-worker baseline and the per-epoch merge budget check."""
+    spec = make_spec(n_tenants, width=width)
+    batches = make_batches(spec, cycles=cycles, rows_per_cycle=rows_per_cycle)
+    out = {}
+    base = None
+    for n in worker_counts:
+        run = run_cluster(spec, batches, n_workers=n, cycles=cycles)
+        if base is None:
+            base = run.rec_per_s
+        out[f"workers_{n}"] = {
+            "workers": n, "records": run.records,
+            "ingest_s": run.ingest_s, "rec_per_s": run.rec_per_s,
+            "speedup_vs_1w": run.rec_per_s / base if base else 0.0,
+            "merge_p50_s": run.merge_p50_s, "merge_p95_s": run.merge_p95_s,
+            "merge_budget_s": merge_budget_s,
+            "merge_within_budget": run.merge_p95_s <= merge_budget_s,
+            "freshness_p50_s": run.freshness_p50_s,
+            "freshness_p95_s": run.freshness_p95_s,
+        }
+        print(f"workers={n}: {run.rec_per_s:,.0f} rec/s "
+              f"(x{out[f'workers_{n}']['speedup_vs_1w']:.2f}), "
+              f"merge p95 {run.merge_p95_s * 1e3:.2f} ms, "
+              f"freshness p95 {run.freshness_p95_s * 1e3:.1f} ms")
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="2-worker correctness run vs the oracle")
+    p.add_argument("--local", action="store_true",
+                   help="in-process workers (no subprocesses)")
+    p.add_argument("--out", default=None, help="JSON report path")
+    p.add_argument("--workers", default="1,2,4",
+                   help="scale-out worker counts (comma-separated)")
+    args = p.parse_args(argv)
+    if args.smoke:
+        run_smoke(args.out, local=args.local)
+        return 0
+    counts = tuple(int(x) for x in args.workers.split(","))
+    rows = run_scaleout(counts)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,274 @@
+"""Sketch-delta wire format: versioned, deterministic state serialization.
+
+The multi-host service (DESIGN.md §18) ships estimator state between
+worker processes and the coordinator.  Every estimator state in this repo
+is a NamedTuple pytree of dense arrays (``SJPCState``, ``ReservoirState``,
+``LSHSSState``), so one generic layout covers all kinds: leaves are
+serialized **in NamedTuple field order** as (field name, dtype, shape,
+little-endian C-order raw bytes).  That makes the encoding a pure function
+of the state -- byte-identical across processes and runs -- and the
+round-trip ``deserialize(serialize(x))`` bit-exact, which the window merge
+algebra requires (a replica window must end up with the same counters the
+worker holds, not approximately the same).
+
+Two delta **modes** mirror the two window strategies of
+``service/window.py``:
+
+  ``MODE_MERGE``    linear kinds (SJPC): the payload is the leaf-wise
+                    difference of the open epoch since the last export --
+                    raw counter arrays -- applied on the replica through
+                    the estimator's ``merge`` (counter addition).
+  ``MODE_REPLACE``  sample kinds (reservoir, lsh_ss): a uniform sample
+                    cannot be shipped as arithmetic deltas, so the open
+                    epoch's full state (items + provenance tags) replaces
+                    the replica's open slot; the replica refolds exactly
+                    like the worker would.
+
+Deserialization reconstructs the **real** state class -- not an anonymous
+namedtuple -- via the kind -> class registry below.  jax pytree operations
+(``tree_map`` across a live state and a deserialized one, ``stack_states``
+over a cohort) match on the container *type*, so a duck-typed stand-in
+would fail structure checks the moment a replica state meets a live one.
+Plugin estimator kinds register theirs with :func:`register_state_type`.
+
+The **zero-byte heartbeat**: a worker with nothing new since its last
+export ships an empty frame instead of a delta bundle (the idle-tenant
+fast path).  :func:`decode_message` maps the empty payload to
+:data:`HEARTBEAT` without touching the version machinery -- heartbeats
+carry no version, so a version bump can never invalidate idle workers.
+
+Framing (length prefixes, the stdin/stdout loop) lives in transport.py;
+this module is pure bytes <-> state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+MAGIC = b"RSJD"                  # delta-message preamble
+WIRE_VERSION = 1                 # bump on any layout change
+
+MODE_MERGE = 1                   # linear delta: apply via estimator.merge
+MODE_REPLACE = 2                 # sample state: replace the open slot
+
+
+class WireVersionError(ValueError):
+    """Peer speaks a different wire version; merging would corrupt state."""
+
+
+class WireFormatError(ValueError):
+    """Payload does not parse as a delta message."""
+
+
+# -- kind -> state class registry -------------------------------------------
+
+_STATE_TYPES: dict[str, type] = {}
+
+
+def register_state_type(kind: str, cls: type) -> None:
+    """Register an estimator kind's state NamedTuple class so
+    :func:`decode_message` can rebuild genuine instances (pytree-compatible
+    with live states).  Idempotent for the same class; a conflicting
+    re-registration is an error."""
+    prev = _STATE_TYPES.get(kind)
+    if prev is not None and prev is not cls:
+        raise ValueError(f"state type for kind {kind!r} already registered "
+                         f"as {prev.__name__}, not {cls.__name__}")
+    _STATE_TYPES[kind] = cls
+
+
+def state_type(kind: str) -> type:
+    if kind not in _STATE_TYPES:
+        _register_builtin_kinds()
+    if kind not in _STATE_TYPES:
+        raise KeyError(f"no state type registered for estimator kind "
+                       f"{kind!r}; call register_state_type")
+    return _STATE_TYPES[kind]
+
+
+def _register_builtin_kinds() -> None:
+    from repro.core.sjpc import SJPCState
+    from repro.estimators.lsh_ss import LSHSSState
+    from repro.estimators.reservoir import ReservoirState
+    for kind, cls in (("sjpc", SJPCState), ("reservoir", ReservoirState),
+                      ("lsh_ss", LSHSSState)):
+        register_state_type(kind, cls)
+
+
+# -- messages ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeltaMessage:
+    """One stream's epoch-aligned export."""
+    kind: str                    # estimator kind ("sjpc", ...)
+    stream: str                  # stream (tenant) name
+    epoch: int                   # the open epoch this delta belongs to
+    window_version: int          # worker window version at export time
+    mode: int                    # MODE_MERGE | MODE_REPLACE
+    state: object                # the kind's state NamedTuple (numpy leaves)
+
+
+class _Heartbeat:
+    """Singleton marker for the zero-byte idle export."""
+
+    def __repr__(self) -> str:   # pragma: no cover - repr cosmetics
+        return "HEARTBEAT"
+
+
+HEARTBEAT = _Heartbeat()
+
+
+# -- encoding ---------------------------------------------------------------
+
+def _pack_str(s: str, width: str = "H") -> bytes:
+    raw = s.encode("utf-8")
+    return struct.pack("<" + width, len(raw)) + raw
+
+
+def _leaf_bytes(arr) -> tuple[str, tuple, bytes]:
+    """(dtype-str, shape, raw) of one state leaf, normalized to
+    little-endian C order so the encoding is platform-independent."""
+    a = np.asarray(arr)
+    if not a.flags["C_CONTIGUOUS"]:
+        # NB: not ascontiguousarray -- that promotes 0-d leaves to (1,)
+        a = np.ascontiguousarray(a)
+    le = a.dtype.newbyteorder("<")
+    if a.dtype != le:
+        a = a.astype(le)
+    return le.str, tuple(a.shape), a.tobytes(order="C")
+
+
+def encode_delta(msg: DeltaMessage) -> bytes:
+    """Serialize one delta message (deterministic: NamedTuple field
+    order, fixed-width little-endian header fields)."""
+    fields = getattr(msg.state, "_fields", None)
+    if fields is None:
+        raise WireFormatError(
+            f"state of kind {msg.kind!r} is not a NamedTuple pytree "
+            f"({type(msg.state).__name__})")
+    out = [MAGIC, struct.pack("<HB", WIRE_VERSION, msg.mode),
+           _pack_str(msg.kind, "B"), _pack_str(msg.stream),
+           struct.pack("<qq", msg.epoch, msg.window_version),
+           struct.pack("<B", len(fields))]
+    for name in fields:
+        dt, shape, raw = _leaf_bytes(getattr(msg.state, name))
+        out.append(_pack_str(name, "B"))
+        out.append(_pack_str(dt, "B"))
+        out.append(struct.pack("<B", len(shape)))
+        out.append(struct.pack(f"<{len(shape)}I", *shape) if shape else b"")
+        out.append(struct.pack("<Q", len(raw)))
+        out.append(raw)
+    return b"".join(out)
+
+
+def encode_heartbeat() -> bytes:
+    """The idle-worker fast path: zero bytes.  No version field -- there
+    is nothing to mismatch -- and nothing for the coordinator to merge."""
+    return b""
+
+
+class _Reader:
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes):
+        self.buf, self.pos = buf, 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.buf):
+            raise WireFormatError(
+                f"truncated delta message: wanted {n} bytes at offset "
+                f"{self.pos}, have {len(self.buf) - self.pos}")
+        out = self.buf[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def unpack(self, fmt: str):
+        vals = struct.unpack("<" + fmt, self.take(struct.calcsize("<" + fmt)))
+        return vals[0] if len(vals) == 1 else vals
+
+    def take_str(self, width: str = "H") -> str:
+        return self.take(self.unpack(width)).decode("utf-8")
+
+
+def decode_message(payload: bytes):
+    """Decode one export payload: :data:`HEARTBEAT` for the empty frame,
+    a :class:`DeltaMessage` otherwise.  Raises :class:`WireVersionError`
+    (naming both versions) on a wire-version mismatch BEFORE touching any
+    state bytes -- cross-version payloads must never half-parse."""
+    if not payload:
+        return HEARTBEAT
+    r = _Reader(payload)
+    magic = r.take(len(MAGIC))
+    if magic != MAGIC:
+        raise WireFormatError(f"bad delta magic {magic!r} (expected {MAGIC!r})")
+    version, mode = r.unpack("HB")
+    if version != WIRE_VERSION:
+        raise WireVersionError(
+            f"wire version mismatch: peer sent version {version}, this "
+            f"process speaks version {WIRE_VERSION}; refusing to merge")
+    if mode not in (MODE_MERGE, MODE_REPLACE):
+        raise WireFormatError(f"unknown delta mode {mode}")
+    kind = r.take_str("B")
+    stream = r.take_str()
+    epoch, window_version = r.unpack("qq")
+    n_fields = r.unpack("B")
+    cls = state_type(kind)
+    if n_fields != len(cls._fields):
+        raise WireFormatError(
+            f"kind {kind!r} delta carries {n_fields} leaves, state type "
+            f"{cls.__name__} has {len(cls._fields)}")
+    leaves = {}
+    for i in range(n_fields):
+        name = r.take_str("B")
+        if name != cls._fields[i]:
+            raise WireFormatError(
+                f"kind {kind!r} leaf {i} is {name!r}, expected "
+                f"{cls._fields[i]!r} (field order is part of the format)")
+        dt = np.dtype(r.take_str("B"))
+        ndim = r.unpack("B")
+        if ndim:
+            dims = r.unpack(f"{ndim}I")
+            shape = (dims,) if ndim == 1 else tuple(dims)
+        else:
+            shape = ()
+        nbytes = r.unpack("Q")
+        raw = r.take(nbytes)
+        # copy out of the frame buffer: leaves must be writable, C-order
+        # arrays (they feed straight into the window merge algebra)
+        leaves[name] = np.frombuffer(raw, dtype=dt).reshape(shape).copy()
+    if r.pos != len(payload):
+        raise WireFormatError(
+            f"{len(payload) - r.pos} trailing bytes after delta message")
+    return DeltaMessage(kind=kind, stream=stream, epoch=epoch,
+                        window_version=window_version, mode=mode,
+                        state=cls(**leaves))
+
+
+def encode_bundle(messages: list[bytes]) -> bytes:
+    """Concatenate encoded delta messages into one export payload:
+    uint32 count, then (uint32 length, bytes) per message.  An empty
+    message list is NOT a bundle -- idle workers ship
+    :func:`encode_heartbeat` (zero bytes) instead."""
+    out = [struct.pack("<I", len(messages))]
+    for m in messages:
+        out.append(struct.pack("<I", len(m)))
+        out.append(m)
+    return b"".join(out)
+
+
+def decode_bundle(payload: bytes):
+    """Inverse of :func:`encode_bundle`; the empty payload decodes to
+    :data:`HEARTBEAT` (no messages, no version check, no merge work)."""
+    if not payload:
+        return HEARTBEAT
+    r = _Reader(payload)
+    count = r.unpack("I")
+    msgs = []
+    for _ in range(count):
+        msgs.append(decode_message(r.take(r.unpack("I"))))
+    if r.pos != len(payload):
+        raise WireFormatError(
+            f"{len(payload) - r.pos} trailing bytes after delta bundle")
+    return msgs

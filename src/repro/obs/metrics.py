@@ -57,6 +57,21 @@ def _fmt_labels(key: tuple) -> str:
     return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
 
 
+def _parse_labels(s: str) -> tuple:
+    """Inverse of :func:`_fmt_labels` for the collect() label strings
+    (``_`` = no labels).  Label values never contain quotes or commas in
+    this codebase (stream/group/kind names), so a split suffices."""
+    if s in ("", "_"):
+        return ()
+    if not (s.startswith("{") and s.endswith("}")):
+        raise ValueError(f"unparseable label string {s!r}")
+    out = []
+    for part in s[1:-1].split(","):
+        k, _, v = part.partition("=")
+        out.append((k, v.strip('"')))
+    return tuple(out)
+
+
 class Histogram:
     """Fixed-bucket histogram: counts per upper bound + sum + count."""
 
@@ -182,6 +197,31 @@ class MetricsRegistry:
                         "p99": h.quantile(0.99)}
                     for k, h in fam.items()}
         return out
+
+    def absorb(self, collected: dict, **labels) -> None:
+        """Fold another registry's :meth:`collect` snapshot into this one
+        (the coordinator's per-worker ``metrics_report`` aggregation,
+        DESIGN.md §18).  ``labels`` are appended to every absorbed series
+        (``worker="2"``), so re-absorbing a newer snapshot from the same
+        source *overwrites* rather than double-counts: every absorbed
+        value lands as a gauge (scrape semantics -- the worker's counters
+        stay cumulative on the worker).  Flattened histograms land as
+        ``name:count/sum/p50/p95/p99`` gauges."""
+        if not self.enabled:
+            return
+        extra = _labelkey(labels)
+        with self._lock:
+            for name, fam in collected.items():
+                if not isinstance(fam, dict):
+                    continue
+                for labelstr, value in fam.items():
+                    key = tuple(sorted(_parse_labels(labelstr) + extra))
+                    if isinstance(value, dict):     # flattened histogram
+                        for stat, v in value.items():
+                            self._gauges.setdefault(
+                                f"{name}:{stat}", {})[key] = float(v)
+                    else:
+                        self._gauges.setdefault(name, {})[key] = float(value)
 
     def to_prometheus(self) -> str:
         """The Prometheus text exposition format (counters get a _total

@@ -42,6 +42,7 @@ shapes drift (backing-epoch refill widens sample windows mid-life).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from repro.obs import Observability
 
@@ -57,6 +58,11 @@ class PlannerConfig:
     #   per-tenant budget is set)
     tenant_budgets: tuple = ()       # ((tenant, refill), ...) overrides
     tenant_burst: float | None = None    # bucket capacity (None = refill)
+    coalesce_window: float = 0.0     # seconds (§16.6): a cohort/pair whose
+    #   launch completed within this window serves the SAME result to the
+    #   next poll even if window versions moved -- back-to-back sub-second
+    #   polls reuse the in-flight launch instead of recomputing.  0 = off
+    #   (every version bump recomputes; the pre-coalescing behavior)
 
 
 class _Bucket:
@@ -103,6 +109,12 @@ class QueryPlanner:
             self.cfg.tenant_budgets)
         self._buckets: dict[str, _Bucket] = {}
         self._last: dict[str, object] = {}   # query name -> last fresh result
+        # launch coalescing (§16.6): ("self", ck) / ("join", pair) -> the
+        # (timestamp, cache key) of the last *fresh* launch.  Aliased
+        # serves keep the original record, so a real launch happens at
+        # least once per coalesce window
+        self._coalesce: dict = {}
+        self._now = time.monotonic           # injectable clock (tests)
 
     # -- registration-side invalidation --------------------------------
     def invalidate_queries(self) -> None:
@@ -248,6 +260,53 @@ class QueryPlanner:
             return result._replace(stale=True)
         return {k: r._replace(stale=True) for k, r in result.items()}
 
+    # -- launch coalescing (§16.6) -------------------------------------
+    @staticmethod
+    def _launch_key(snap: Snapshot, op: str, member) -> tuple:
+        """The version-embedding cache key ``member`` resolves to in this
+        snapshot (the key the fused launch would fill)."""
+        if op == "self":
+            return snap._self_key(snap._cohort_views(*member), True)
+        a, b = member
+        return ("join", a, snap._view(a).version,
+                b, snap._view(b).version, True)
+
+    def _apply_coalescing(self, snap: Snapshot, cohort_prio: dict,
+                          pair_prio: dict) -> list:
+        """Alias cache entries for launches whose previous fresh result is
+        younger than the coalesce window: the new version key points at
+        the last launch's entry, so the launch loop skips the cohort/pair
+        entirely.  Returns the members that still need fresh launches (the
+        records to stamp afterwards)."""
+        win = self.cfg.coalesce_window
+        m = self.obs.metrics
+        fresh = []
+        now = self._now() if win > 0.0 else 0.0
+        for op, prio in (("self", cohort_prio), ("join", pair_prio)):
+            for member in prio:
+                key = self._launch_key(snap, op, member)
+                if key in snap._cache:
+                    continue
+                rec = self._coalesce.get((op, member)) if win > 0.0 else None
+                if (rec is not None and now - rec[0] <= win
+                        and rec[1] in snap._cache and rec[1] != key):
+                    # within the window: serve the in-flight result under
+                    # the new version key (no device work; the entry ages
+                    # out when the ORIGINAL launch leaves the window)
+                    snap._cache[key] = snap._cache_get(rec[1])
+                    if m.enabled:
+                        m.inc("planner_coalesced_launches_total", op=op)
+                else:
+                    fresh.append((op, member, key))
+        return fresh
+
+    def _stamp_coalescing(self, fresh: list) -> None:
+        if self.cfg.coalesce_window <= 0.0:
+            return
+        now = self._now()
+        for op, member, key in fresh:
+            self._coalesce[(op, member)] = (now, key)
+
     # -- the poll body -------------------------------------------------
     def poll(self, snap: Snapshot,
              queries: dict[str, ContinuousQuery]) -> dict:
@@ -275,6 +334,7 @@ class QueryPlanner:
                     ck = plan.query_cohort[name]
                     cohort_prio[ck] = min(cohort_prio.get(ck, q.priority),
                                           q.priority)
+            fresh = self._apply_coalescing(snap, cohort_prio, pair_prio)
             launches = [(min(cohort_prio[ck] for ck in cks), "self", cks)
                         for cks in plan.self_launches
                         if any(ck in cohort_prio for ck in cks)]
@@ -302,6 +362,7 @@ class QueryPlanner:
                             m.inc("planner_fused_cohorts_total",
                                   value=float(len(pairs)), op="join")
                         snap._join_batch(pairs, True)
+            self._stamp_coalescing(fresh)
         out = {}
         for name, q in queries.items():
             if name in throttled:

@@ -114,18 +114,31 @@ class StreamRegistry:
                  window_epochs: int | None = None, *,
                  estimator: str = "sjpc",
                  estimator_cfg=None,
-                 backing_epochs: int = 0) -> StreamEntry:
+                 backing_epochs: int = 0,
+                 uid: int | None = None) -> StreamEntry:
+        """``uid`` pins the stream's per-registry id instead of taking the
+        next dense one.  The uid keys the per-(stream, round) ingest PRNG
+        grid (``ingest.ingest_key``), so a distributed worker that pins
+        its tenants' *global* uids sketches bit-identically to a
+        single-process run over the same stream -- the replica-vs-oracle
+        contract of DESIGN.md §18.  Pinned uids must be unique; the dense
+        counter skips past them."""
         if name in self._streams:
             raise ValueError(f"stream {name!r} already registered")
+        if uid is None:
+            uid = self._next_uid
+        elif any(e.uid == uid for e in self._streams.values()):
+            raise ValueError(f"uid {uid} already taken (pinned uids must "
+                             "be unique per registry)")
         group = self.group(group_id)
         est = group.estimator(estimator, estimator_cfg)
         entry = StreamEntry(
-            name=name, group_id=group_id, uid=self._next_uid,
+            name=name, group_id=group_id, uid=uid,
             window=WindowedSketch(est, est.init(sid=0), window_epochs,
                                   backing_epochs=backing_epochs,
                                   obs=self.obs, name=name),
             estimator_kind=estimator)
-        self._next_uid += 1
+        self._next_uid = max(self._next_uid, uid) + 1
         self._streams[name] = entry
         self.version += 1
         return entry

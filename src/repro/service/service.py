@@ -142,14 +142,18 @@ class EstimationService:
                       window_epochs=_DEFAULT_WINDOW, *,
                       estimator: str | None = None,
                       estimator_cfg=None,
-                      backing_epochs: int | None = None) -> StreamEntry:
+                      backing_epochs: int | None = None,
+                      uid: int | None = None) -> StreamEntry:
         """Register a stream.  ``estimator`` picks the protocol kind
         ("sjpc" | "reservoir" | "lsh_ss", default from ServiceConfig);
         competitors derive an equal-space config from the group's
         SJPCConfig unless ``estimator_cfg`` overrides it.
         ``backing_epochs`` enables the sample-window refill fold for
         windowed sample estimators (default from ServiceConfig; linear
-        kinds reject it -- their expiry is exact already)."""
+        kinds reject it -- their expiry is exact already).  ``uid`` pins
+        the stream's registry id (distributed workers pin global tenant
+        uids so their ingest PRNG grid matches a single-process run --
+        see StreamRegistry.register)."""
         if window_epochs is _DEFAULT_WINDOW:
             window_epochs = self.cfg.window_epochs
         kind = estimator or self.cfg.estimator
@@ -166,7 +170,7 @@ class EstimationService:
             backing = backing_epochs
         entry = self.registry.register(
             name, group_id, window_epochs, estimator=kind,
-            estimator_cfg=estimator_cfg, backing_epochs=backing)
+            estimator_cfg=estimator_cfg, backing_epochs=backing, uid=uid)
         if self.obs.metrics.enabled:
             self.obs.metrics.set("estimator_memory_bytes",
                                  float(entry.window.memory_bytes()),
@@ -203,6 +207,48 @@ class EstimationService:
                 f"{entry.estimator_kind!r}; external state deltas need a "
                 "linear (mergeable-by-arithmetic) estimator")
         entry.window.absorb_delta(est.merge(entry.window.ingest_base(), delta))
+        if self.obs.auditor is not None:
+            self.obs.auditor.mark_unauditable(name)
+        self.obs.metrics.inc("ingest_state_deltas_total", stream=name)
+
+    # -- multi-host delta exchange (distributed/, DESIGN.md §18) --------
+    def export_deltas(self) -> list:
+        """Every stream's unshipped window delta since the last export
+        (flushing first so the exports reflect all buffered records):
+        ``[(name, kind, epoch, window_version, mode, state), ...]``.
+        Streams with nothing new are skipped entirely -- an idle service
+        returns ``[]`` and its worker ships the zero-byte heartbeat."""
+        self.flush()
+        out = []
+        for e in self.registry.streams():
+            d = e.window.export_delta()
+            if d is None:
+                continue
+            mode, state = d
+            out.append((e.name, e.estimator_kind, e.window.epoch,
+                        e.window.version, mode, state))
+            self.obs.metrics.inc("delta_exports_total", stream=e.name,
+                                 mode=mode)
+        return out
+
+    def apply_remote_delta(self, name: str, mode: str, state) -> None:
+        """Replica-side application of one exported delta.  ``"merge"``
+        folds a linear counter delta into the open epoch via the existing
+        merge algebra (exactly :meth:`ingest_state_delta`); ``"replace"``
+        installs a sample kind's open-slot state and refolds.  Epoch
+        alignment (apply-before-advance) is the coordinator's contract."""
+        entry = self.registry.stream(name)
+        if mode == "merge":
+            self.ingest_state_delta(name, state)
+            return
+        if mode != "replace":
+            raise ValueError(f"unknown delta mode {mode!r}")
+        if entry.estimator.linear:
+            raise ValueError(
+                f"stream {name!r} runs linear estimator "
+                f"{entry.estimator_kind!r}; replace-mode deltas are the "
+                "sample-window protocol (linear kinds merge)")
+        entry.window.absorb_delta(state)
         if self.obs.auditor is not None:
             self.obs.auditor.mark_unauditable(name)
         self.obs.metrics.inc("ingest_state_deltas_total", stream=name)

@@ -88,6 +88,14 @@ class WindowedSketch:
         self.total = init_state
         self.epoch = 0                      # index of the open epoch
         self.version = 0                    # bumped whenever ``total`` changes
+        # delta-export bookkeeping (distributed/, DESIGN.md §18): the
+        # version last shipped and, for linear windows, the open epoch's
+        # content at that point (the shipped baseline the next delta is
+        # taken against).  Reset on advance_epoch -- exports are
+        # per-open-epoch, never cumulative, because expiry subtraction
+        # runs independently (and identically) on worker and replica rings
+        self._shipped_version = 0
+        self._shipped_base = None
         if window_epochs is None:
             return
         if estimator.linear:
@@ -167,6 +175,43 @@ class WindowedSketch:
                      else self.estimator.merge(total, s))
         self.total = total
 
+    # -- delta export (the multi-host protocol, DESIGN.md §18) ----------
+    def export_delta(self):
+        """What a worker ships for this stream since its last export:
+        ``None`` when nothing changed (the caller sends the zero-byte
+        heartbeat), else ``(mode, state)``:
+
+        * linear windows -> ``("merge", delta)``: the leaf-wise difference
+          of the open epoch's accumulated state against the shipped
+          baseline (raw counter arrays; the replica applies it through the
+          estimator's merge, crediting its own open ring slot);
+        * sample windows -> ``("replace", state)``: the open slot's full
+          state (provenance tags included) -- a uniform sample has no
+          arithmetic delta, so the replica replaces its slot and refolds.
+
+        Epoch alignment is the caller's contract: the coordinator exports
+        from every worker BEFORE broadcasting advance_epoch, so a slot is
+        fully mirrored when it closes (advance_epoch resets the baseline).
+        """
+        if self.version == self._shipped_version:
+            return None
+        self._shipped_version = self.version
+        if not self.estimator.linear:
+            return ("replace", self.ingest_base())
+        acc = (self.total if self.window_epochs is None
+               else index_state(self._ring, self._pos))
+        base = self._shipped_base
+        self._shipped_base = acc
+        delta = acc if base is None else jax.tree_util.tree_map(
+            lambda a, b: jnp.asarray(a) - jnp.asarray(b), acc, base)
+        if "step" in getattr(delta, "_fields", ()):
+            # ``step`` is worker-local PRNG history (fold-in position), not
+            # window data; a replica never ingests records, so it has no
+            # PRNG position to advance.  Shipping zero keeps the replica a
+            # pure data mirror: counters and n bit-equal, step pinned at 0
+            delta = delta._replace(step=jnp.zeros_like(delta.step))
+        return ("merge", delta)
+
     def advance_epoch(self) -> None:
         """Close the open epoch.  If the ring is full, the oldest epoch
         expires: subtracted from ``total`` (linear) or dropped from the
@@ -201,6 +246,14 @@ class WindowedSketch:
                     self._refold()
                     self.version += 1
             sp.sync(*jax.tree_util.tree_leaves(self.total))
+        # re-arm the export baseline for the new open epoch.  Rotation is
+        # driven in lockstep by the coordinator (export-before-advance),
+        # so the version bump an expiry causes must not read as "new data
+        # to ship" -- an idle worker stays heartbeat-only across
+        # rotations.  Unbounded windows never take this path: their
+        # exports stay cumulative against the standing baseline.
+        self._shipped_base = None
+        self._shipped_version = self.version
         m = self.obs.metrics
         if m.enabled:
             m.inc("window_rotations_total", stream=self.name)

@@ -1,0 +1,300 @@
+"""Multi-host distributed service tests (DESIGN.md §18).
+
+The in-process tests drive the REAL protocol -- encoded opcode frames
+through ``worker.handle_request`` via ``LocalWorker`` handles -- so the
+full wire surface is exercised without subprocess startup.  The one
+subprocess test (slow lane) runs the same smoke workload through actual
+child processes.
+
+Covered contracts:
+  * coordinator == single-process oracle: bit-exact linear replica
+    counters, every estimate within 1e-6 (uid pinning + epoch alignment);
+  * uid pinning at the registry level: a shard registering only its
+    tenants at pinned global uids sketches bit-identically;
+  * idle-worker fast path: zero-byte heartbeat, no replica version bump,
+    no coordinator merge work;
+  * lost worker: its tenants serve the last-merged window ``stale=True``,
+    other tenants are unaffected;
+  * window.export_delta: per-open-epoch increments, None when idle,
+    baseline re-armed on rotation (expiry never re-ships as data).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.sjpc import SJPCConfig
+from repro.distributed import harness, shard_of, wire
+from repro.distributed.transport import OP_EXPORT
+from repro.obs import Observability
+from repro.service import ContinuousQuery, EstimationService, ServiceConfig
+
+CFG = SJPCConfig(d=5, s=3, ratio=0.5, width=128, depth=2, seed=9)
+
+
+def _mini_spec(**kw):
+    kw.setdefault("kinds", ("sjpc", "reservoir"))
+    return harness.make_spec(4, d=CFG.d, s=CFG.s, width=CFG.width,
+                             depth=CFG.depth, seed=CFG.seed,
+                             window_epochs=3, batch_rows=64, **kw)
+
+
+def _run_pair(spec, cycles=3, rows=96, seed=5):
+    batches = harness.make_batches(spec, cycles=cycles, rows_per_cycle=rows,
+                                   seed=seed)
+    run = harness.run_cluster(spec, batches, n_workers=2, cycles=cycles,
+                              local=True, keep_open=True)
+    oracle = harness.run_oracle(spec, batches, cycles=cycles)
+    return run, oracle
+
+
+class TestClusterVsOracle:
+    def test_local_two_worker_cluster_matches_oracle(self):
+        spec = _mini_spec()
+        run, oracle = _run_pair(spec)
+        try:
+            agree = harness.compare_to_oracle(run.coordinator, oracle, spec)
+            assert agree["linear_exact"], (
+                "linear replica counters diverged from the single-process run")
+            assert agree["worst_rel_err"] <= 1e-6
+        finally:
+            run.coordinator.close()
+
+    def test_every_cycle_merged_deltas(self):
+        spec = _mini_spec()
+        run, _ = _run_pair(spec, cycles=2)
+        try:
+            assert all(t["deltas"] > 0 for t in run.sync_trace)
+            m = run.coordinator.obs.metrics
+            assert m.counter_total("coordinator_merges_total") > 0
+            h = m._hists.get("coordinator_merge_seconds", {})
+            assert sum(x.count for x in h.values()) == sum(
+                1 for t in run.sync_trace for _ in range(2) if t["deltas"])
+        finally:
+            run.coordinator.close()
+
+
+class TestUidPinning:
+    def test_pinned_shard_matches_dense_registration(self):
+        """A service registering ONLY stream b at its global uid sketches
+        b bit-identically to a service registering a then b densely --
+        the worker-shard == oracle precondition."""
+        rng = np.random.default_rng(3)
+        recs = rng.integers(0, 60, size=(128, CFG.d), dtype=np.uint32)
+
+        def build(streams):
+            svc = EstimationService(
+                ServiceConfig(batch_rows=64, window_epochs=3,
+                              platform="cpu"),
+                obs=Observability.disabled())
+            svc.create_group("g", CFG)
+            for name, uid in streams:
+                svc.create_stream(name, "g", uid=uid)
+            return svc
+
+        dense = build([("a", None), ("b", None)])     # b lands at uid 1
+        shard = build([("b", 1)])                     # pinned straight there
+        for svc in (dense, shard):
+            svc.ingest("b", recs)
+            svc.flush()
+        tb_dense = dense.registry.stream("b").window.total
+        tb_shard = shard.registry.stream("b").window.total
+        assert np.array_equal(np.asarray(tb_dense.counters),
+                              np.asarray(tb_shard.counters))
+        assert np.array_equal(np.asarray(tb_dense.n), np.asarray(tb_shard.n))
+
+    def test_duplicate_pinned_uid_rejected(self):
+        svc = EstimationService(
+            ServiceConfig(batch_rows=64, platform="cpu"),
+            obs=Observability.disabled())
+        svc.create_group("g", CFG)
+        svc.create_stream("a", "g", uid=3)
+        with pytest.raises(ValueError, match="uid"):
+            svc.create_stream("b", "g", uid=3)
+        svc.create_stream("c", "g")          # dense counter skipped past 3
+        assert svc.registry.stream("c").uid == 4
+
+
+class TestIdleHeartbeat:
+    def test_idle_sync_is_zero_byte_no_version_bump_no_merge(self):
+        spec = _mini_spec()
+        run, _ = _run_pair(spec, cycles=2)
+        coord = run.coordinator
+        try:
+            m = coord.obs.metrics
+            merges_before = m.counter_total("coordinator_merges_total")
+            versions = {s["name"]: coord.replicas[0].registry.stream(
+                s["name"]).window.version for s in spec.streams}
+            # the raw payload really is zero bytes (not an empty bundle)
+            for _, h in coord._alive():
+                h.send(OP_EXPORT)
+                payload = h.recv()
+                assert payload == b""
+                assert wire.decode_bundle(payload) is wire.HEARTBEAT
+            stats = coord.sync()             # the full idle cycle
+            assert stats["deltas"] == 0
+            assert stats["heartbeats"] == coord.n_workers
+            assert m.counter_total("coordinator_heartbeats_total") >= 2
+            assert m.counter_total("coordinator_merges_total") == merges_before
+            for s in spec.streams:           # replicas untouched: no bump
+                assert coord.replicas[0].registry.stream(
+                    s["name"]).window.version == versions[s["name"]]
+            # workers counted their heartbeats (direct probe + sync)
+            for _, h in coord._alive():
+                wm = h.runtime.service.obs.metrics
+                assert wm.counter_total("worker_heartbeats_total") >= 2
+        finally:
+            coord.close()
+
+
+class TestWorkerFailure:
+    def test_lost_worker_serves_stale_from_last_merge(self):
+        spec = _mini_spec(kinds=("sjpc",))
+        batches = harness.make_batches(spec, cycles=2, rows_per_cycle=96)
+        run = harness.run_cluster(spec, batches, n_workers=2, cycles=2,
+                                  local=True, keep_open=True)
+        coord = run.coordinator
+        try:
+            names = [s["name"] for s in spec.streams]
+            dead_w = 0
+            dead = [n for n in names if shard_of(n, 2) == dead_w]
+            live = [n for n in names if shard_of(n, 2) != dead_w]
+            assert dead and live             # salted names split both ways
+            before = {n: coord.self_join(n).estimate for n in names}
+            coord.workers[dead_w].fail()
+            more = np.random.default_rng(7).integers(
+                0, 60, size=(64, CFG.d), dtype=np.uint32)
+            for n in names:
+                coord.ingest(n, more)        # dead shard's records dropped
+            coord.sync()
+            assert coord._dead == {dead_w}
+            assert set(coord.stale_tenants) == set(dead)
+            for n in dead:                   # last-merged data, stale flag
+                res = coord.self_join(n)
+                assert res.stale
+                assert res.estimate == before[n]
+            for n in live:                   # fresh shard unaffected
+                assert not coord.self_join(n).stale
+            m = coord.obs.metrics
+            assert m.counter("coordinator_worker_failures_total",
+                             worker=str(dead_w)) == 1.0
+            assert m.counter_total("coordinator_lost_ingest_records_total") \
+                == 64.0 * len(dead)
+            # the poll path folds the same staleness into standing queries
+            coord.register_continuous(ContinuousQuery(
+                name="qd", kind="self_join", streams=(dead[0],)))
+            coord.register_continuous(ContinuousQuery(
+                name="ql", kind="self_join", streams=(live[0],)))
+            out = coord.poll()
+            assert out["qd"].stale and not out["ql"].stale
+        finally:
+            coord.close()
+
+
+class TestExportDelta:
+    def _window(self, **kw):
+        svc = EstimationService(
+            ServiceConfig(batch_rows=64, platform="cpu", **kw),
+            obs=Observability.disabled())
+        svc.create_group("g", CFG)
+        return svc
+
+    def test_linear_exports_are_per_epoch_increments(self):
+        svc = self._window(window_epochs=3)
+        svc.create_stream("t", "g")
+        rng = np.random.default_rng(0)
+        w = svc.registry.stream("t").window
+        svc.ingest("t", rng.integers(0, 60, size=(64, CFG.d), dtype=np.uint32))
+        svc.flush()
+        mode, d1 = w.export_delta()
+        assert mode == "merge"
+        assert w.export_delta() is None                  # idle: nothing new
+        svc.ingest("t", rng.integers(0, 60, size=(64, CFG.d), dtype=np.uint32))
+        svc.flush()
+        mode, d2 = w.export_delta()
+        # increments compose: d1 + d2 == the open epoch's accumulated state
+        total = w.ingest_base()
+        assert np.array_equal(np.asarray(d1.counters) + np.asarray(d2.counters),
+                              np.asarray(total.counters))
+        assert float(np.asarray(d1.n) + np.asarray(d2.n)) == float(
+            np.asarray(total.n))
+        # step is worker-local PRNG history: never shipped
+        assert int(np.asarray(d1.step)) == 0 and int(np.asarray(d2.step)) == 0
+
+    def test_rotation_rearms_baseline_expiry_not_reshipped(self):
+        svc = self._window(window_epochs=2)
+        svc.create_stream("t", "g")
+        rng = np.random.default_rng(1)
+        w = svc.registry.stream("t").window
+        for _ in range(3):                   # long enough to expire an epoch
+            svc.ingest("t", rng.integers(0, 60, size=(64, CFG.d),
+                                         dtype=np.uint32))
+            svc.flush()
+            assert w.export_delta() is not None
+            svc.advance_epoch()
+            # rotation (incl. the expiry subtraction's version bump) must
+            # not read as new data on the wire
+            assert w.export_delta() is None
+
+    def test_unbounded_linear_window_stays_incremental(self):
+        svc = self._window(window_epochs=None)
+        svc.create_stream("t", "g", window_epochs=None)
+        rng = np.random.default_rng(2)
+        w = svc.registry.stream("t").window
+        svc.ingest("t", rng.integers(0, 60, size=(64, CFG.d), dtype=np.uint32))
+        svc.flush()
+        _, d1 = w.export_delta()
+        svc.advance_epoch()                  # no ring: nothing to re-arm
+        assert w.export_delta() is None
+        svc.ingest("t", rng.integers(0, 60, size=(64, CFG.d), dtype=np.uint32))
+        svc.flush()
+        _, d2 = w.export_delta()
+        assert np.array_equal(np.asarray(d1.counters) + np.asarray(d2.counters),
+                              np.asarray(w.total.counters))
+
+    def test_sample_kind_exports_open_slot_replace(self):
+        svc = self._window(window_epochs=3)
+        svc.create_stream("r", "g", estimator="reservoir")
+        rng = np.random.default_rng(3)
+        w = svc.registry.stream("r").window
+        svc.ingest("r", rng.integers(0, 60, size=(64, CFG.d), dtype=np.uint32))
+        svc.flush()
+        mode, state = w.export_delta()
+        assert mode == "replace"
+        open_slot = w.ingest_base()
+        for la, lb in zip(state, open_slot):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+        assert w.export_delta() is None
+
+
+class TestMetricsAggregation:
+    def test_worker_metrics_absorbed_with_worker_label(self):
+        spec = _mini_spec(kinds=("sjpc",))
+        run, _ = _run_pair(spec, cycles=2)
+        coord = run.coordinator
+        try:
+            per_worker = coord.aggregate_metrics()
+            assert set(per_worker) == {0, 1}
+            m = coord.obs.metrics
+            for w, rep in per_worker.items():
+                assert rep["worker"] == w
+                assert m.gauge("worker_stats:ingested_records",
+                               worker=str(w)) > 0
+            report = coord.metrics_report()
+            assert 'worker="0"' in report and 'worker="1"' in report
+            assert "coordinator_merge_seconds" in report
+            # re-absorbing overwrites (gauge semantics), never double-counts
+            v = m.gauge("worker_stats:ingested_records", worker="0")
+            coord.aggregate_metrics()
+            assert m.gauge("worker_stats:ingested_records", worker="0") == v
+        finally:
+            coord.close()
+
+
+@pytest.mark.slow
+class TestSubprocess:
+    def test_subprocess_smoke_matches_oracle(self, tmp_path):
+        report = harness.run_smoke(str(tmp_path / "smoke.json"))
+        assert report["linear_exact"]
+        assert report["worst_rel_err"] <= 1e-6
+        assert (tmp_path / "smoke.json").exists()

@@ -15,8 +15,8 @@ from repro.estimators import base as est_base
 from repro.core.sjpc import SJPCConfig
 from repro.estimators.sjpc_backend import SJPCEstimator
 from repro.obs import MetricsRegistry, Observability, Tracer
-from repro.service import (ContinuousQuery, EstimationService, QueryEngine,
-                           ServiceConfig)
+from repro.service import (ContinuousQuery, EstimationService, PlannerConfig,
+                           QueryEngine, ServiceConfig)
 
 KINDS = ["sjpc", "reservoir", "lsh_ss"]
 
@@ -379,3 +379,69 @@ class TestReplayCoordinateIndependence:
         assert len(la) == len(lc)
         for x, y in zip(la, lc):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestLaunchCoalescing:
+    """ISSUE 9 satellite: ``PlannerConfig.coalesce_window`` lets identical
+    fusion-signature launches from back-to-back sub-second polls reuse the
+    in-flight result -- the new version key aliases the last launch's
+    cache entry, so no device work runs -- while polls outside the window
+    (and the default window of 0) recompute as before."""
+
+    def _svc(self, window):
+        svc = EstimationService(
+            ServiceConfig(batch_rows=64, window_epochs=4,
+                          planner=PlannerConfig(coalesce_window=window)),
+            obs=_obs())
+        svc.create_group("g", _cfg())
+        svc.create_stream("a", "g")
+        svc.create_stream("b", "g")
+        svc.register_continuous(ContinuousQuery("qa", "self_join", ("a",)))
+        svc.register_continuous(ContinuousQuery("qj", "join", ("a", "b")))
+        clock = [0.0]
+        svc.planner._now = lambda: clock[0]
+        return svc, clock
+
+    def _ingest_poll(self, svc, rng):
+        for nm in ("a", "b"):
+            svc.ingest(nm, _records(rng, 64))
+        return svc.poll()
+
+    def test_within_window_reuses_launch(self):
+        svc, clock = self._svc(0.5)
+        rng = np.random.default_rng(0)
+        m = svc.obs.metrics
+        r1 = self._ingest_poll(svc, rng)           # t=0: fresh launches
+        clock[0] = 0.2
+        r2 = self._ingest_poll(svc, rng)           # in-window: coalesced
+        assert m.counter("planner_coalesced_launches_total", op="self") == 1.0
+        assert m.counter("planner_coalesced_launches_total", op="join") == 1.0
+        # served the in-flight result, fresh (not the stale channel)
+        assert r2["qa"].estimate == r1["qa"].estimate
+        assert r2["qj"].estimate == r1["qj"].estimate
+        assert not r2["qa"].stale and not r2["qj"].stale
+        clock[0] = 1.0                             # window measured from the
+        r3 = self._ingest_poll(svc, rng)           # LAUNCH, not the alias
+        assert m.counter_total("planner_coalesced_launches_total") == 2.0
+        assert r3["qa"].estimate != r1["qa"].estimate
+
+    def test_zero_window_always_recomputes(self):
+        svc, clock = self._svc(0.0)
+        rng = np.random.default_rng(1)
+        r1 = self._ingest_poll(svc, rng)
+        r2 = self._ingest_poll(svc, rng)           # same instant: still fresh
+        assert svc.obs.metrics.counter_total(
+            "planner_coalesced_launches_total") == 0.0
+        assert r1["qa"].estimate != r2["qa"].estimate
+
+    def test_unchanged_versions_hit_cache_not_coalescing(self):
+        """A poll with no new data is a plain version-keyed cache hit; the
+        coalescing counter must not claim it."""
+        svc, clock = self._svc(10.0)
+        rng = np.random.default_rng(2)
+        r1 = self._ingest_poll(svc, rng)
+        clock[0] = 0.1
+        r2 = svc.poll()                            # no ingest between polls
+        assert svc.obs.metrics.counter_total(
+            "planner_coalesced_launches_total") == 0.0
+        assert r2["qa"].estimate == r1["qa"].estimate

@@ -1,0 +1,185 @@
+"""Property tests for the sketch-delta wire format (DESIGN.md §18.2).
+
+The distributed service's correctness rests on three wire properties:
+
+* **Bit-exact round-trip**: ``decode(encode(x))`` reproduces every leaf of
+  every estimator kind's state byte-for-byte (dtype, shape, values) -- the
+  replica merge algebra tolerates no drift.
+* **Merge transparency**: merging a deserialized state equals merging the
+  live state -- serialization must be invisible to the window algebra.
+* **Version safety**: a payload from a different wire version is rejected
+  whole (``WireVersionError`` naming both versions), never half-parsed.
+
+Runs under the conftest hypothesis stub (tier-1) or real hypothesis (the
+CI property job): only ``integers``/``sampled_from`` strategies.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.tree_util as jtu
+
+from repro import estimators as E
+from repro.core.sjpc import SJPCConfig
+from repro.distributed import wire
+
+CFG = SJPCConfig(d=5, s=3, ratio=0.5, width=64, depth=2, seed=7)
+KINDS = ("sjpc", "reservoir", "lsh_ss")
+ESTS = {kind: E.make(kind, CFG) for kind in KINDS}
+
+
+def _estimator(kind):
+    return ESTS[kind]
+
+
+def _ingest_round(est, state, seed, rows=32):
+    """One protocol-path ingest round for a single stream (the
+    test_estimators.py idiom)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 50, size=(rows, CFG.d), dtype=np.uint32)
+    keys = jax.random.fold_in(
+        jax.random.PRNGKey(est.ingest_seed), seed)[None, None]
+    new = est.ingest_rounds(E.stack_states([state]), vals[None, None],
+                            np.ones((1, 1, rows), np.int32), keys)
+    return E.index_state(new, 0)
+
+
+def _ingested_state(kind, seed, rows=32):
+    return _ingest_round(ESTS[kind], ESTS[kind].init(sid=0), seed, rows)
+
+
+def _assert_leaves_bitexact(a, b):
+    for name, la, lb in zip(a._fields, a, b):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype, name
+        assert la.shape == lb.shape, name
+        assert np.array_equal(la, lb, equal_nan=True), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(KINDS), st.integers(min_value=0, max_value=1000))
+def test_roundtrip_bitexact(kind, seed):
+    state = _ingested_state(kind, seed)
+    msg = wire.DeltaMessage(kind=kind, stream=f"t-{seed}", epoch=seed % 7,
+                            window_version=seed, mode=wire.MODE_REPLACE,
+                            state=state)
+    back = wire.decode_message(wire.encode_delta(msg))
+    assert back.kind == kind and back.stream == f"t-{seed}"
+    assert back.epoch == seed % 7 and back.window_version == seed
+    assert type(back.state) is type(state)          # real class: pytree-safe
+    _assert_leaves_bitexact(state, back.state)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=500),
+       st.integers(min_value=0, max_value=500))
+def test_merge_of_deserialized_equals_merge_of_live(sa, sb):
+    """Serialization must be invisible to the merge algebra (every kind)."""
+    for kind in KINDS:
+        est = _estimator(kind)
+        a = _ingested_state(kind, sa)
+        b = _ingested_state(kind, 1000 + sb)
+        rt = lambda s: wire.decode_message(wire.encode_delta(
+            wire.DeltaMessage(kind=kind, stream="x", epoch=0,
+                              window_version=0, mode=wire.MODE_MERGE,
+                              state=s))).state
+        live = est.merge(a, b)
+        wired = est.merge(rt(a), rt(b))
+        _assert_leaves_bitexact(jtu.tree_map(np.asarray, live),
+                                jtu.tree_map(np.asarray, wired))
+
+
+def test_roundtrip_backing_epoch_sample_window():
+    """The ship-the-open-slot path for a backing-epoch sample window: the
+    slot state round-trips bit-exact and installs on a mirror window."""
+    from repro.service.window import WindowedSketch
+    est = _estimator("reservoir")
+    w = WindowedSketch(est, est.init(sid=0), 3, backing_epochs=2)
+    for seed in range(2):
+        w.absorb_delta(_ingest_round(est, w.ingest_base(), seed))
+        w.advance_epoch()
+    # rotation re-arms the export baseline: new open-epoch data exports
+    w.absorb_delta(_ingest_round(est, w.ingest_base(), 99))
+    mode, state = w.export_delta()
+    assert mode == "replace"
+    back = wire.decode_message(wire.encode_delta(wire.DeltaMessage(
+        kind="reservoir", stream="t", epoch=w.epoch,
+        window_version=w.version, mode=wire.MODE_REPLACE, state=state)))
+    _assert_leaves_bitexact(jtu.tree_map(np.asarray, state), back.state)
+    mirror = WindowedSketch(est, est.init(sid=0), 3, backing_epochs=2)
+    mirror.absorb_delta(back.state)
+    _assert_leaves_bitexact(jtu.tree_map(np.asarray, mirror.ingest_base()),
+                            jtu.tree_map(np.asarray, state))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=65535))
+def test_version_mismatch_rejected(version):
+    """Any wire version but ours is refused with both versions named --
+    BEFORE any state bytes are touched."""
+    state = _ingested_state("sjpc", 0)
+    payload = wire.encode_delta(wire.DeltaMessage(
+        kind="sjpc", stream="t", epoch=0, window_version=0,
+        mode=wire.MODE_MERGE, state=state))
+    forged = payload[:4] + struct.pack("<H", version) + payload[6:]
+    if version == wire.WIRE_VERSION:
+        wire.decode_message(forged)          # our version: parses fine
+        return
+    with pytest.raises(wire.WireVersionError) as ei:
+        wire.decode_message(forged)
+    assert str(version) in str(ei.value)
+    assert str(wire.WIRE_VERSION) in str(ei.value)
+
+
+def test_heartbeat_is_zero_bytes_and_versionless():
+    assert wire.encode_heartbeat() == b""
+    assert wire.decode_message(b"") is wire.HEARTBEAT
+    assert wire.decode_bundle(b"") is wire.HEARTBEAT
+
+
+def test_bundle_roundtrip_and_truncation():
+    msgs = [wire.encode_delta(wire.DeltaMessage(
+        kind="sjpc", stream=f"t{i}", epoch=i, window_version=i,
+        mode=wire.MODE_MERGE, state=_ingested_state("sjpc", i)))
+        for i in range(3)]
+    bundle = wire.encode_bundle(msgs)
+    back = wire.decode_bundle(bundle)
+    assert [m.stream for m in back] == ["t0", "t1", "t2"]
+    with pytest.raises(wire.WireFormatError):
+        wire.decode_bundle(bundle[:-3])
+    with pytest.raises(wire.WireFormatError):
+        wire.decode_message(b"XXXX" + bundle[4:40])
+
+
+def test_field_order_and_count_are_checked():
+    state = _ingested_state("sjpc", 0)
+    payload = wire.encode_delta(wire.DeltaMessage(
+        kind="sjpc", stream="t", epoch=0, window_version=0,
+        mode=wire.MODE_MERGE, state=state))
+    # flip the field-count byte: kind(B+4)... locate via a reparse offset
+    # is brittle; instead corrupt the first leaf's name length so the
+    # field-name check trips
+    idx = payload.index(b"counters")
+    bad = payload[:idx] + b"cowriter" + payload[idx + 8:]
+    with pytest.raises(wire.WireFormatError):
+        wire.decode_message(bad)
+
+
+def test_register_state_type_conflicts():
+    class Fake:
+        _fields = ("x",)
+    wire.register_state_type("_test_kind", Fake)
+    wire.register_state_type("_test_kind", Fake)        # idempotent
+    class Other:
+        _fields = ("x",)
+    with pytest.raises(ValueError):
+        wire.register_state_type("_test_kind", Other)
+    assert wire.state_type("_test_kind") is Fake
+    with pytest.raises(KeyError):
+        wire.state_type("_no_such_kind")
