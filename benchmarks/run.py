@@ -584,6 +584,11 @@ def bench_roofline():
 
 def main(argv):
     os.makedirs(OUT_DIR, exist_ok=True)
+    # REPRO_PLUGINS=examples.plugins adds plugin estimator kinds: suites
+    # that enumerate estimators.available() (equal_space) pick them up
+    # automatically, so plugin rows land in the collated report
+    from repro import estimators
+    estimators.load_plugins()
     from benchmarks import paper_benchmarks as PB
     names = argv or (list(PB.ALL)
                      + ["kernels", "service", "planner", "equal_space",

@@ -1,0 +1,3 @@
+"""Runnable examples for the repro service (and, under ``plugins/``,
+estimator kinds registered entirely from outside ``src/repro`` --
+the DESIGN.md §19 extension surface)."""

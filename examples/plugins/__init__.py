@@ -1,0 +1,31 @@
+"""Plugin estimator kinds: the DESIGN.md §19 extension surface, proven.
+
+Importing this package registers two estimator kinds that live entirely
+outside ``src/repro`` -- no core module knows their names:
+
+  "theta_kmv"  a KMV/theta bottom-K distinct-value sketch with retained
+               multiplicities (docs/PLUGINS.md walks through it line by
+               line).  Sample-window semantics, no join support, no
+               exact-replay oracle (it estimates distinct values and
+               duplicate pairs, not the pairwise-similarity g -- the
+               accuracy auditor skips it with ``reason="no_exact_oracle"``).
+  "ipf"        a Pagh-Sivertsen-style inner-product filter estimator:
+               per-subset partitioned CountSketch rows per level, served
+               through the SAME Eq. 4/7 inversions as the paper's sketch.
+               Linear window semantics, join-capable, audited by the
+               shared pairwise exact oracle.
+
+Point ``REPRO_PLUGINS=examples.plugins`` at this module (or import it)
+and both kinds serve through ``EstimationService``, the planner, the
+distributed wire format, and the coordinator without a single edit under
+``src/repro/{service,distributed,obs}``.
+"""
+from . import inner_product, theta_sketch  # noqa: F401  (registration)
+
+from .inner_product import IPFConfig, IPFEstimator, IPFState
+from .theta_sketch import ThetaConfig, ThetaEstimator, ThetaState
+
+__all__ = [
+    "IPFConfig", "IPFEstimator", "IPFState",
+    "ThetaConfig", "ThetaEstimator", "ThetaState",
+]

@@ -45,8 +45,6 @@ from .transport import (OP_ADVANCE, OP_CONFIG, OP_EXPORT, OP_FLUSH,
                         OP_INGEST, OP_METRICS, OP_SHUTDOWN)
 from .worker import WorkerRuntime, encode_ingest, handle_request
 
-_UNWIRE_MODE = {wire.MODE_MERGE: "merge", wire.MODE_REPLACE: "replace"}
-
 
 def shard_of(name: str, n_workers: int) -> int:
     """The worker owning tenant ``name`` (stable content hash, so every
@@ -315,7 +313,7 @@ class Coordinator:
                 continue
             touched = []
             for msg in msgs:
-                mode = _UNWIRE_MODE[msg.mode]
+                mode = wire.mode_name(msg.mode)
                 for svc in self.replicas:
                     svc.apply_remote_delta(msg.stream, mode, msg.state)
                 touched.append(msg.stream)

@@ -210,7 +210,7 @@ def compare_to_oracle(coord: Coordinator, oracle, spec: ClusterSpec) -> dict:
         name = st["name"]
         rw = replica.registry.stream(name)
         ow = oracle.registry.stream(name)
-        if rw.estimator.linear:
+        if rw.window.spec.linear:
             a, b = rw.window.total, ow.window.total
             # step is worker-local PRNG history: the replica mirrors data
             # (counters, n), not the fold count

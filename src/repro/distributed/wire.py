@@ -63,38 +63,44 @@ class WireFormatError(ValueError):
 
 
 # -- kind -> state class registry -------------------------------------------
-
-_STATE_TYPES: dict[str, type] = {}
-
+#
+# One registration per kind: the state class lives in the estimator spec
+# registry (``estimators.register`` / ``register_state_type``), and the
+# wire codec reads it from there.  These thin delegates keep the historic
+# ``wire.register_state_type`` entry point working; imports stay lazy so
+# this module remains importable without pulling in jax.
 
 def register_state_type(kind: str, cls: type) -> None:
     """Register an estimator kind's state NamedTuple class so
     :func:`decode_message` can rebuild genuine instances (pytree-compatible
     with live states).  Idempotent for the same class; a conflicting
-    re-registration is an error."""
-    prev = _STATE_TYPES.get(kind)
-    if prev is not None and prev is not cls:
-        raise ValueError(f"state type for kind {kind!r} already registered "
-                         f"as {prev.__name__}, not {cls.__name__}")
-    _STATE_TYPES[kind] = cls
+    re-registration is an error.  Delegates to the estimator spec
+    registry -- kinds registered through ``estimators.register`` with a
+    ``state_cls`` need no separate call."""
+    from repro import estimators
+    estimators.register_state_type(kind, cls)
 
 
 def state_type(kind: str) -> type:
-    if kind not in _STATE_TYPES:
-        _register_builtin_kinds()
-    if kind not in _STATE_TYPES:
-        raise KeyError(f"no state type registered for estimator kind "
-                       f"{kind!r}; call register_state_type")
-    return _STATE_TYPES[kind]
+    from repro import estimators
+    return estimators.state_type(kind)
 
 
-def _register_builtin_kinds() -> None:
-    from repro.core.sjpc import SJPCState
-    from repro.estimators.lsh_ss import LSHSSState
-    from repro.estimators.reservoir import ReservoirState
-    for kind, cls in (("sjpc", SJPCState), ("reservoir", ReservoirState),
-                      ("lsh_ss", LSHSSState)):
-        register_state_type(kind, cls)
+def mode_code(mode: str) -> int:
+    """Wire byte for a window export mode string ("merge" / "replace" --
+    ``EstimatorSpec.wire_mode``)."""
+    try:
+        return {"merge": MODE_MERGE, "replace": MODE_REPLACE}[mode]
+    except KeyError:
+        raise WireFormatError(f"unknown delta mode {mode!r}") from None
+
+
+def mode_name(code: int) -> str:
+    """Inverse of :func:`mode_code` (for the coordinator's merge path)."""
+    try:
+        return {MODE_MERGE: "merge", MODE_REPLACE: "replace"}[code]
+    except KeyError:
+        raise WireFormatError(f"unknown delta mode {code}") from None
 
 
 # -- messages ---------------------------------------------------------------

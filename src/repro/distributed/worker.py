@@ -35,8 +35,6 @@ from . import transport, wire
 from .transport import (OP_ADVANCE, OP_CONFIG, OP_EXPORT, OP_FLUSH,
                         OP_INGEST, OP_METRICS, OP_SHUTDOWN)
 
-_WIRE_MODE = {"merge": wire.MODE_MERGE, "replace": wire.MODE_REPLACE}
-
 
 class WorkerRuntime:
     """The service shard behind one worker: built from the coordinator's
@@ -83,7 +81,7 @@ class WorkerRuntime:
             return wire.encode_heartbeat()
         msgs = [wire.encode_delta(wire.DeltaMessage(
             kind=kind, stream=name, epoch=epoch, window_version=version,
-            mode=_WIRE_MODE[mode], state=state))
+            mode=wire.mode_code(mode), state=state))
             for name, kind, epoch, version, mode, state in deltas]
         m.inc("worker_delta_messages_total", value=float(len(msgs)))
         return wire.encode_bundle(msgs)

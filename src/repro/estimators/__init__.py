@@ -14,15 +14,19 @@ Importing this package registers the built-in kinds:
 ``make(kind, sjpc_cfg)`` derives each competitor's configuration from the
 group's SJPCConfig, so all kinds are equal-space by construction.
 """
-from .base import (EstimateTable, Estimator, available, index_state, make,
-                   register, scan_rounds, stack_states, zeros_like_stack)
+from .base import (EstimateTable, Estimator, EstimatorSpec, available,
+                   index_state, load_plugins, make, pairwise_exact_oracle,
+                   register, register_spec, register_state_type, scan_rounds,
+                   spec, spec_of, stack_states, state_type, zeros_like_stack)
 from .lsh_ss import LSHSSConfig, LSHSSEstimator, derive_config
 from .reservoir import ReservoirConfig, ReservoirEstimator, capacity_for_bytes
 from .sjpc_backend import SJPCEstimator
 
 __all__ = [
-    "EstimateTable", "Estimator", "LSHSSConfig", "LSHSSEstimator",
-    "ReservoirConfig", "ReservoirEstimator", "SJPCEstimator", "available",
-    "capacity_for_bytes", "derive_config", "index_state", "make", "register",
-    "scan_rounds", "stack_states", "zeros_like_stack",
+    "EstimateTable", "Estimator", "EstimatorSpec", "LSHSSConfig",
+    "LSHSSEstimator", "ReservoirConfig", "ReservoirEstimator",
+    "SJPCEstimator", "available", "capacity_for_bytes", "derive_config",
+    "index_state", "load_plugins", "make", "pairwise_exact_oracle",
+    "register", "register_spec", "register_state_type", "scan_rounds",
+    "spec", "spec_of", "stack_states", "state_type", "zeros_like_stack",
 ]

@@ -38,6 +38,7 @@ side-by-side deployment is the default, not a benchmark contrivance.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import numpy as np
@@ -233,23 +234,207 @@ def merge_tagged_samples(items_a, tags_a, n_a, items_b, tags_b, n_b,
 
 
 # ---------------------------------------------------------------------------
-# Registry: estimator kinds -> factories over the group's SJPCConfig
+# Spec registry: ONE declarative record per estimator kind (DESIGN.md §19)
 # ---------------------------------------------------------------------------
 
-_REGISTRY: dict[str, Callable] = {}
+@dataclasses.dataclass(frozen=True)
+class EstimatorSpec:
+    """Everything any layer needs to know about an estimator kind.
+
+    One registration feeds every consumer: the factory (``make``), the
+    state NamedTuple class (the distributed wire codec), the window
+    strategy (``linear``: delta-ring vs slot-fold, and with it the wire
+    delta mode), join gating (``join_capable``), the uncertainty story
+    (``stderr_kind``), the planner's fusion-signature contribution
+    (``fusion``), and the accuracy auditor's exact-replay oracle
+    (``exact_oracle``).
+
+    Capability fields default to ``None`` = "resolve from the instance
+    attribute" (``est.linear`` / ``est.supports_join`` / a served table's
+    ``stderr_kind``), so legacy ``register(kind, factory)`` calls keep
+    working unchanged; :func:`spec_of` performs that resolution.
+
+      factory(sjpc_cfg, *, params=None, estimator_cfg=None, opts=None)
+      fusion(est) -> hashable        planner fusion-signature config part
+      exact_oracle(query_kind, records) -> (s -> float)  exact g replay
+    """
+    kind: str
+    factory: Callable | None = None
+    state_cls: type | None = None
+    linear: bool | None = None
+    join_capable: bool | None = None
+    stderr_kind: str | None = None
+    fusion: Callable | None = None
+    exact_oracle: Callable | None = None
+    registrant: str = "?"
+
+    @property
+    def wire_mode(self) -> str:
+        """The distributed delta mode this kind ships (DESIGN.md §18.2):
+        linear kinds send per-epoch counter increments (``"merge"``),
+        sample kinds replace their open slot (``"replace"``)."""
+        return "merge" if self.linear else "replace"
 
 
-def register(kind: str, factory: Callable) -> None:
-    """factory(sjpc_cfg, params=None, estimator_cfg=None, opts=None)
+_REGISTRY: dict[str, EstimatorSpec] = {}
+
+
+def _callable_id(fn):
+    """Identity of a callable that survives module re-import: the same
+    source definition re-executed (importlib.reload of a plugin module)
+    produces a new function object but the same (module, qualname)."""
+    if fn is None:
+        return None
+    return (getattr(fn, "__module__", None),
+            getattr(fn, "__qualname__", repr(fn)))
+
+
+def _cls_id(cls):
+    if cls is None:
+        return None
+    return (getattr(cls, "__module__", None),
+            getattr(cls, "__qualname__", cls.__name__),
+            tuple(getattr(cls, "_fields", ())))
+
+
+def _spec_signature(sp: EstimatorSpec):
+    """The comparison key for idempotent re-registration: identical specs
+    (same definitions, even across a module reload) are a no-op; anything
+    else is a conflict."""
+    return (sp.kind, _callable_id(sp.factory), _cls_id(sp.state_cls),
+            sp.linear, sp.join_capable, sp.stderr_kind,
+            _callable_id(sp.fusion), _callable_id(sp.exact_oracle))
+
+
+def register_spec(spec: EstimatorSpec) -> EstimatorSpec:
+    """Register (or idempotently re-register) a kind's spec.
+
+    Identical re-registration -- same kind, same factory/state-class
+    definitions, same capability fields -- is a no-op, so plugin modules
+    survive being imported twice (or reloaded).  A *conflicting*
+    re-registration raises, naming both registrants.  A spec may also
+    *complete* a partial prior registration: a state-class-only spec (the
+    wire codec's channel) merges with a later factory registration for
+    the same kind, and vice versa.
+    """
+    prev = _REGISTRY.get(spec.kind)
+    if prev is None:
+        _REGISTRY[spec.kind] = spec
+        return spec
+    if _spec_signature(prev) == _spec_signature(spec):
+        # Idempotent -- but ADOPT the newcomer: after importlib.reload the
+        # re-executed module's class/function objects are the live ones
+        # (the module dict is updated in place, so factories registered
+        # earlier already resolve names against the NEW definitions).
+        # Keeping the stale objects would make decode-by-kind hand back a
+        # class that `is not` the one fresh states carry.
+        _REGISTRY[spec.kind] = spec
+        return spec
+    merged = _merge_specs(prev, spec)
+    if merged is None:
+        raise ValueError(
+            f"estimator kind {spec.kind!r} already registered by "
+            f"{prev.registrant} with a conflicting spec; refused "
+            f"re-registration from {spec.registrant}")
+    _REGISTRY[spec.kind] = merged
+    return merged
+
+
+def _merge_specs(prev: EstimatorSpec, new: EstimatorSpec):
+    """Fill ``None`` fields of ``prev`` from ``new`` (and vice versa);
+    ``None`` if any concrete field disagrees (a genuine conflict)."""
+    updates = {}
+    for f in ("factory", "state_cls", "linear", "join_capable",
+              "stderr_kind", "fusion", "exact_oracle"):
+        a, b = getattr(prev, f), getattr(new, f)
+        if a is None and b is not None:
+            updates[f] = b
+        elif a is not None and b is not None:
+            ident = _cls_id if f == "state_cls" else (
+                _callable_id if callable(a) else (lambda x: x))
+            if ident(a) != ident(b):
+                return None
+    return dataclasses.replace(prev, **updates) if updates else prev
+
+
+def register(kind: str, factory: Callable, *, state_cls: type | None = None,
+             linear: bool | None = None, join_capable: bool | None = None,
+             stderr_kind: str | None = None, fusion: Callable | None = None,
+             exact_oracle: Callable | None = None) -> EstimatorSpec:
+    """Register an estimator kind (declaratively, once, for every layer).
+
+    ``factory(sjpc_cfg, params=None, estimator_cfg=None, opts=None)``
     -> Estimator.  ``estimator_cfg`` overrides the kind's derived config;
-    ``opts`` carries construction kwargs (dispatch flags etc.)."""
-    if kind in _REGISTRY:
-        raise ValueError(f"estimator kind {kind!r} already registered")
-    _REGISTRY[kind] = factory
+    ``opts`` carries construction kwargs (dispatch flags etc.).  The
+    keyword fields populate the kind's :class:`EstimatorSpec`; omitted
+    ones resolve from the instance (see :func:`spec_of`), so the legacy
+    two-argument form keeps working.  Identical re-registration is a
+    no-op; a conflicting one raises, naming both registrants.
+    """
+    return register_spec(EstimatorSpec(
+        kind=kind, factory=factory, state_cls=state_cls, linear=linear,
+        join_capable=join_capable, stderr_kind=stderr_kind, fusion=fusion,
+        exact_oracle=exact_oracle,
+        registrant=getattr(factory, "__module__", "?")))
+
+
+def register_state_type(kind: str, cls: type) -> None:
+    """Register the state NamedTuple class for ``kind`` (the wire codec's
+    decode channel).  Merges into the kind's spec: idempotent for the
+    same class, conflict (naming both registrants) otherwise."""
+    prev = _REGISTRY.get(kind)
+    if prev is not None and prev.state_cls is not None \
+            and _cls_id(prev.state_cls) != _cls_id(cls):
+        raise ValueError(
+            f"state type for kind {kind!r} already registered as "
+            f"{prev.state_cls.__name__} (by {prev.registrant}), not "
+            f"{cls.__name__} (from {getattr(cls, '__module__', '?')})")
+    register_spec(EstimatorSpec(
+        kind=kind, state_cls=cls,
+        registrant=getattr(cls, "__module__", "?")))
+
+
+def spec(kind: str) -> EstimatorSpec:
+    """The registered spec for ``kind`` (KeyError if unknown)."""
+    if kind not in _REGISTRY:
+        raise KeyError(
+            f"unknown estimator kind {kind!r}; available: {available()}")
+    return _REGISTRY[kind]
+
+
+def spec_of(est: Estimator) -> EstimatorSpec:
+    """The RESOLVED spec for an estimator instance: registered fields win;
+    ``None`` capability fields fall back to the instance attributes.  For
+    instances of unregistered kinds (ad-hoc subclasses in tests) this
+    synthesizes a spec entirely from the instance."""
+    kind = getattr(est, "kind", "abstract")
+    sp = _REGISTRY.get(kind)
+    if sp is None:
+        sp = EstimatorSpec(kind=kind, registrant=type(est).__module__)
+    updates = {}
+    if sp.linear is None:
+        updates["linear"] = bool(getattr(est, "linear", False))
+    if sp.join_capable is None:
+        updates["join_capable"] = bool(getattr(est, "supports_join", False))
+    return dataclasses.replace(sp, **updates) if updates else sp
+
+
+def state_type(kind: str) -> type:
+    """The registered state NamedTuple class for ``kind`` (the wire
+    codec's container type; KeyError if none registered)."""
+    sp = _REGISTRY.get(kind)
+    if sp is None or sp.state_cls is None:
+        raise KeyError(
+            f"no state type registered for estimator kind {kind!r}; "
+            f"register_state_type() it (plugins: import the plugin module "
+            f"on the decoding side too)")
+    return sp.state_cls
 
 
 def available() -> list[str]:
-    return sorted(_REGISTRY)
+    """Kinds that can be instantiated (state-type-only registrations --
+    a decode-side wire channel without a factory -- are excluded)."""
+    return sorted(k for k, sp in _REGISTRY.items() if sp.factory is not None)
 
 
 def make(kind: str, sjpc_cfg, *, params=None, estimator_cfg=None,
@@ -265,8 +450,56 @@ def make(kind: str, sjpc_cfg, *, params=None, estimator_cfg=None,
     per (group, kind) so a group's streams share one engine and its jit
     caches.
     """
-    if kind not in _REGISTRY:
+    sp = _REGISTRY.get(kind)
+    if sp is None or sp.factory is None:
         raise KeyError(
             f"unknown estimator kind {kind!r}; available: {available()}")
-    return _REGISTRY[kind](sjpc_cfg, params=params,
-                           estimator_cfg=estimator_cfg, opts=opts)
+    return sp.factory(sjpc_cfg, params=params,
+                      estimator_cfg=estimator_cfg, opts=opts)
+
+
+def load_plugins(modules=None) -> list[str]:
+    """Import plugin modules for their registration side effect.
+
+    ``modules`` is an iterable of module names; default is the
+    ``REPRO_PLUGINS`` environment variable (comma-separated), so services
+    and benchmarks pick up plugin kinds without code changes.  Importing
+    an already-imported module is a no-op (and re-registration of an
+    identical spec is too), so this is safe to call repeatedly.
+    """
+    import importlib
+    import os
+    if modules is None:
+        raw = os.environ.get("REPRO_PLUGINS", "")
+        modules = [m for m in (p.strip() for p in raw.split(",")) if m]
+    loaded = []
+    for name in modules:
+        importlib.import_module(name)
+        loaded.append(name)
+    return loaded
+
+
+# ---------------------------------------------------------------------------
+# Shared exact-replay oracle for pairwise-similarity kinds
+# ---------------------------------------------------------------------------
+
+def pairwise_exact_oracle(query_kind: str, records):
+    """The exact g replay shared by every kind that estimates the paper's
+    pairwise-similarity counts (DESIGN.md §15.4): given the mirrored
+    record batches of a query's streams, return ``g(s)`` -- the exact
+    number of candidate pairs at threshold ``s``.
+
+    ``records`` is a tuple of per-stream ``(n, d)`` uint32 arrays: one
+    entry for self-join queries, two for §6 joins.  Kinds whose estimand
+    is NOT this g (a distinct counter, say) register their own oracle --
+    or ``None``, which the auditor surfaces as a reason-labeled skip.
+    """
+    from repro.core import exact
+    if query_kind == "join":
+        a, b = records
+        counts = np.asarray(exact.brute_force_join_counts(a, b))
+        return lambda s: float(counts[s:].sum())
+    recs = records[0]
+    x = np.asarray(exact.exact_pair_counts(recs))
+    n = recs.shape[0]
+    return lambda s: float(x[s:].sum() + n)

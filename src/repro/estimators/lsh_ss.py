@@ -50,8 +50,8 @@ import jax.numpy as jnp
 from repro.core.sjpc import SJPCConfig
 
 from . import uncertainty
-from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
-                   scan_rounds)
+from .base import (EstimateTable, Estimator, merge_tagged_samples,
+                   pairwise_exact_oracle, register, scan_rounds)
 from .reservoir import reservoir_accept
 
 _MERGE_SALT = 0x15A55B01
@@ -431,4 +431,6 @@ def _factory(sjpc_cfg: SJPCConfig, *, params=None, estimator_cfg=None,
     return LSHSSEstimator(estimator_cfg, **(dict(opts) if opts else {}))
 
 
-register("lsh_ss", _factory)
+register("lsh_ss", _factory, state_cls=LSHSSState, linear=False,
+         join_capable=False, stderr_kind="bootstrap_stratified",
+         exact_oracle=pairwise_exact_oracle)

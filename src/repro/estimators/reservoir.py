@@ -45,8 +45,8 @@ from repro.core import exact
 from repro.core.sjpc import SJPCConfig
 
 from . import uncertainty
-from .base import (EstimateTable, Estimator, merge_tagged_samples, register,
-                   scan_rounds)
+from .base import (EstimateTable, Estimator, merge_tagged_samples,
+                   pairwise_exact_oracle, register, scan_rounds)
 
 _MERGE_SALT = 0x7E5E4B01
 
@@ -312,4 +312,6 @@ def _factory(sjpc_cfg: SJPCConfig, *, params=None, estimator_cfg=None,
     return ReservoirEstimator(estimator_cfg, **(dict(opts) if opts else {}))
 
 
-register("reservoir", _factory)
+register("reservoir", _factory, state_cls=ReservoirState, linear=False,
+         join_capable=False, stderr_kind="bootstrap",
+         exact_oracle=pairwise_exact_oracle)

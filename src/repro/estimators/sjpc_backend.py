@@ -16,7 +16,8 @@ import numpy as np
 from repro.core import sjpc
 from repro.core.sjpc import SJPCConfig, SJPCParams, SJPCState
 
-from .base import EstimateTable, Estimator, register, stack_states
+from .base import (EstimateTable, Estimator, pairwise_exact_oracle, register,
+                   stack_states)
 
 
 class SJPCEstimator(Estimator):
@@ -155,7 +156,9 @@ def _factory(sjpc_cfg, *, params=None, estimator_cfg=None, opts=None):
     return SJPCEstimator(sjpc_cfg, params, **kwargs)
 
 
-register("sjpc", _factory)
+register("sjpc", _factory, state_cls=SJPCState, linear=True,
+         join_capable=True, stderr_kind="analytic",
+         exact_oracle=pairwise_exact_oracle)
 
 
 __all__ = ["SJPCEstimator", "stack_states"]

@@ -13,8 +13,10 @@ story into a live signal:
   with the window's epochs, so the auditor can reconstruct exactly the
   data behind any snapshot.
 * **Sampled replay**: at rate ``rate`` per polled query, the mirrored
-  window is pushed through ``core/exact.py`` (the O(2^d n) group-by
-  oracle -- exact, not an estimate) and compared to the served
+  window is pushed through the estimator kind's declared
+  ``exact_oracle`` (``EstimatorSpec``, DESIGN.md §19; for the pairwise
+  kinds that is ``core/exact.py``'s O(2^d n) group-by oracle -- exact,
+  not an estimate) and compared to the served
   :class:`~repro.service.query.QueryResult`:
 
     ``accuracy_rel_err{kind,s}``        histogram of |est - g|/max(g, 1)
@@ -28,9 +30,11 @@ story into a live signal:
 * **Honesty guards**: streams fed by ``ingest_state_delta`` (no raw
   records to mirror) are marked unauditable; windows whose mirrored
   record count disagrees with the served ``n`` (a mirror bug, never
-  silent) and windows above ``max_records`` (the exact oracle is
-  quadratic in lattice width, not free) skip with a reason-labeled
-  ``accuracy_audit_skipped_total`` counter instead of lying.
+  silent), windows above ``max_records`` (the exact oracle is
+  quadratic in lattice width, not free), and kinds whose spec declares
+  no exact oracle (a plugin estimating something the replay cannot
+  check) skip with a reason-labeled ``accuracy_audit_skipped_total``
+  counter instead of lying.
 
 Sampling uses a dedicated seeded generator, so audit cost is
 deterministic per workload and replayable in tests (rate=1 audits
@@ -39,8 +43,6 @@ everything).
 from __future__ import annotations
 
 import numpy as np
-
-from repro.core import exact
 
 from .metrics import MetricsRegistry
 
@@ -120,6 +122,17 @@ class AccuracyAuditor:
         if lo <= g_exact <= hi:
             self.registry.inc("accuracy_ci_covered_total", kind=kind)
 
+    def _oracle_for(self, kind: str):
+        """The estimator kind's exact-replay oracle from its spec
+        (DESIGN.md §19); ``None`` when the kind declares none (or is
+        unregistered) -- the audit skips with a reason instead of
+        replaying an estimand the kind does not estimate."""
+        from repro import estimators
+        try:
+            return estimators.spec(kind).exact_oracle
+        except KeyError:
+            return None
+
     def maybe_audit(self, result, kind: str) -> bool:
         """Sampled audit of one served result: a QueryResult or an
         all-thresholds dict (one replay covers every threshold).  Returns
@@ -131,23 +144,18 @@ class AccuracyAuditor:
         if not results:
             return False
         r0 = results[0]
-        if r0.kind == "join":
-            a, b = r0.streams
-            ra = self._mirror(a, r0.n[0])
-            rb = self._mirror(b, r0.n[1])
-            if ra is None or rb is None:
-                return False
-            counts = exact.brute_force_join_counts(ra, rb)
-            for r in results:
-                self._observe(r, float(counts[r.s:].sum()), kind)
-            return True
-        name = r0.streams[0]
-        recs = self._mirror(name, r0.n[0])
-        if recs is None:
+        oracle = self._oracle_for(kind)
+        if oracle is None:
+            self._skip("no_exact_oracle")
             return False
-        # one exact inversion answers every threshold of the dict
-        x = exact.exact_pair_counts(recs)
-        n = recs.shape[0]
+        records = []
+        for i, name in enumerate(r0.streams):
+            recs = self._mirror(name, r0.n[i])
+            if recs is None:
+                return False
+            records.append(recs)
+        # one exact replay answers every threshold of the dict
+        g_of_s = oracle(r0.kind, tuple(records))
         for r in results:
-            self._observe(r, float(x[r.s:].sum() + n), kind)
+            self._observe(r, g_of_s(r.s), kind)
         return True

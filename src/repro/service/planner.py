@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro import estimators
 from repro.obs import Observability
 
 from .query import ContinuousQuery, QueryResult, Snapshot
@@ -145,10 +146,15 @@ class QueryPlanner:
         it falls back to instance identity (fused only with itself)."""
         est = view.estimator
         group = self.registry.group(view.group_id)
-        cfg = getattr(est, "cfg", None)
         if group.cached_estimator(view.kind) is not est:
             cfg = id(est)
         else:
+            # the kind's spec may contribute its own fusion key
+            # (``EstimatorSpec.fusion``, DESIGN.md §19); the default is
+            # the instance's derived config
+            fusion = estimators.spec_of(est).fusion
+            cfg = fusion(est) if fusion is not None \
+                else getattr(est, "cfg", None)
             try:
                 hash(cfg)
             except TypeError:

@@ -168,11 +168,12 @@ class StreamRegistry:
 
     def joinable(self, a: str, b: str) -> bool:
         """Two streams support the §6 join estimator iff they share hashes
-        AND both run an estimator kind that defines joins (SJPC)."""
+        AND both run a kind whose spec declares ``join_capable``
+        (DESIGN.md §19; built in: SJPC)."""
         ea, eb = self.stream(a), self.stream(b)
         return (ea.group_id == eb.group_id
                 and ea.estimator_kind == eb.estimator_kind
-                and ea.estimator.supports_join)
+                and est_mod.spec_of(ea.estimator).join_capable)
 
     def require_joinable(self, a: str, b: str) -> HashGroup:
         ea, eb = self.stream(a), self.stream(b)
@@ -185,5 +186,5 @@ class StreamRegistry:
             raise ValueError(
                 f"streams {a!r} ({ea.estimator_kind}) and {b!r} "
                 f"({eb.estimator_kind}) must both run a join-capable "
-                "estimator (sjpc) to answer §6 join queries")
+                "estimator kind to answer §6 join queries")
         return self.group_of(a)

@@ -29,6 +29,7 @@ import time
 
 import jax
 
+from repro import estimators
 from repro import platform as repro_platform
 from repro.core.sjpc import SJPCConfig, SJPCState
 from repro.obs import (AccuracyAuditor, Observability, Tracer,
@@ -161,9 +162,10 @@ class EstimationService:
             backing = self.cfg.backing_epochs
             # the config-level default applies only where it is meaningful
             # (bounded sample windows); explicit arguments stay strict.
-            # ``linear`` is a kind-level capability, so the group's cached
-            # instance answers for cfg-overridden streams too
-            if (self.registry.group(group_id).estimator(kind).linear
+            # ``linear`` is a kind-level capability, read from the spec
+            # (the group's cached instance resolves legacy registrations)
+            if (estimators.spec_of(
+                    self.registry.group(group_id).estimator(kind)).linear
                     or window_epochs is None):
                 backing = 0
         else:
@@ -201,7 +203,7 @@ class EstimationService:
         cannot absorb foreign states)."""
         entry = self.registry.stream(name)
         est = entry.estimator
-        if not est.linear:
+        if not estimators.spec_of(est).linear:
             raise ValueError(
                 f"stream {name!r} runs non-linear estimator "
                 f"{entry.estimator_kind!r}; external state deltas need a "
@@ -243,7 +245,7 @@ class EstimationService:
             return
         if mode != "replace":
             raise ValueError(f"unknown delta mode {mode!r}")
-        if entry.estimator.linear:
+        if estimators.spec_of(entry.estimator).linear:
             raise ValueError(
                 f"stream {name!r} runs linear estimator "
                 f"{entry.estimator_kind!r}; replace-mode deltas are the "

@@ -1,7 +1,8 @@
 """Sliding-window estimator state: per-epoch ring with expiry.
 
 Generalized over the :class:`repro.estimators.Estimator` protocol.  Two
-window strategies, chosen by the estimator's ``linear`` capability:
+window strategies, chosen by the kind's declarative spec
+(``EstimatorSpec.linear``, DESIGN.md §19):
 
 **Linear estimators** (SJPC): expiry-by-subtraction, exactly the PR 1
 design.  Keep the cumulative state of the live window (``total``) plus
@@ -52,7 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.estimators import Estimator, index_state
+from repro.estimators import Estimator, index_state, spec_of
 from repro.obs import Observability
 
 
@@ -72,11 +73,15 @@ class WindowedSketch:
         self.obs = obs if obs is not None else Observability.disabled()
         self.name = name                     # metric label (stream name)
         self.estimator = estimator
+        # the kind's declarative spec (DESIGN.md §19) drives the window
+        # strategy: ``spec.linear`` picks delta-ring vs slot-fold, and
+        # ``spec.wire_mode`` the distributed delta mode
+        self.spec = spec_of(estimator)
         self.cfg = getattr(estimator, "cfg", None)
         self.window_epochs = window_epochs
         self.backing_epochs = int(backing_epochs)
         if self.backing_epochs:
-            if estimator.linear:
+            if self.spec.linear:
                 raise ValueError(
                     "backing_epochs is a sample-window refill; linear "
                     f"estimators ({estimator.kind!r}) expire exactly by "
@@ -98,7 +103,7 @@ class WindowedSketch:
         self._shipped_base = None
         if window_epochs is None:
             return
-        if estimator.linear:
+        if self.spec.linear:
             # ring of per-epoch DELTA states, stacked pytree leaves
             self._ring = jax.tree_util.tree_map(
                 lambda x: jnp.zeros((window_epochs,) + tuple(jnp.shape(x)),
@@ -119,7 +124,7 @@ class WindowedSketch:
         """The state the ingest pipeline should update: the cumulative
         window for linear estimators (and unbounded windows), the open
         epoch's own state for windowed sample estimators."""
-        if self.window_epochs is not None and not self.estimator.linear:
+        if self.window_epochs is not None and not self.spec.linear:
             return self._slots[self._pos]
         return self.total
 
@@ -140,7 +145,7 @@ class WindowedSketch:
             # equal-but-new state must not thrash version-keyed caches
             return
         self.version += 1
-        if self.window_epochs is None or self.estimator.linear:
+        if self.window_epochs is None or self.spec.linear:
             if self.window_epochs is not None:
                 delta = self.estimator.subtract(new_state, self.total)
                 self._ring = jax.tree_util.tree_map(
@@ -196,8 +201,8 @@ class WindowedSketch:
         if self.version == self._shipped_version:
             return None
         self._shipped_version = self.version
-        if not self.estimator.linear:
-            return ("replace", self.ingest_base())
+        if not self.spec.linear:
+            return (self.spec.wire_mode, self.ingest_base())
         acc = (self.total if self.window_epochs is None
                else index_state(self._ring, self._pos))
         base = self._shipped_base
@@ -227,7 +232,7 @@ class WindowedSketch:
                            histogram="window_rotate_seconds",
                            labels={"stream": self.name},
                            stream=self.name, expiring=expiring) as sp:
-            if self.estimator.linear:
+            if self.spec.linear:
                 if expiring:
                     # the slot we are about to reuse holds the expiring
                     # epoch; version bumps only here -- a rotation that
@@ -302,7 +307,7 @@ class WindowedSketch:
         """Recompute total from the ring (diagnostics / invariant W1;
         linear estimators only -- sample windows fold via merge)."""
         assert self.window_epochs is not None, "unbounded window has no ring"
-        assert self.estimator.linear, "sample windows have no delta ring"
+        assert self.spec.linear, "sample windows have no delta ring"
         return self._with_total_step(
             jax.tree_util.tree_map(lambda x: x.sum(axis=0), self._ring))
 

@@ -10,6 +10,12 @@ and where off-by-one bugs live), then seeded-random draws.  Runs are fully
 reproducible across processes.
 
 If real hypothesis is importable we use it untouched.
+
+Also honors ``REPRO_PLUGINS`` (comma-separated module names): plugin
+estimator kinds are registered BEFORE collection, so module-scope
+``estimators.available()`` enumerations (test_estimators.KINDS,
+test_wire.KINDS) parametrize over them too -- the CI plugin-conformance
+job runs the whole matrix with ``REPRO_PLUGINS=examples.plugins``.
 """
 from __future__ import annotations
 
@@ -101,3 +107,13 @@ except ImportError:
 
     sys.modules["hypothesis"] = stub
     sys.modules["hypothesis.strategies"] = strategies
+
+
+def pytest_configure(config):
+    """Register REPRO_PLUGINS estimator kinds before test collection so
+    module-scope ``available()`` enumerations see them."""
+    del config
+    if os.environ.get("REPRO_PLUGINS"):
+        sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+        from repro import estimators
+        estimators.load_plugins()

@@ -67,15 +67,22 @@ class TestServedStderr:
         svc.create_group("g", CFG)
         rng = np.random.default_rng(5)
         vals = rng.integers(0, 6, size=(400, CFG.d)).astype(np.uint32)
-        expect = {"sjpc": "analytic", "reservoir": "bootstrap",
+        # the builtin stories are pinned literally (the PR 4 regression);
+        # other registered kinds (plugins imported elsewhere in the test
+        # session) are held to the story their spec declares
+        pinned = {"sjpc": "analytic", "reservoir": "bootstrap",
                   "lsh_ss": "bootstrap_stratified"}
         for kind in E.available():
             svc.create_stream(kind, "g", estimator=kind)
             svc.ingest(kind, vals)
         snap = svc.snapshot()
         for kind in E.available():
+            expect = pinned.get(kind) or E.spec(kind).stderr_kind or "none"
             r = snap.self_join(kind)
-            assert r.stderr_kind == expect[kind], kind
+            assert r.stderr_kind == expect, kind
+            if expect == "none":
+                assert r.stderr == 0, (kind, r)
+                continue
             assert r.stderr > 0, (kind, r)
             lo, hi = r.ci()
             assert 0 <= lo <= r.estimate <= hi, (kind, r)

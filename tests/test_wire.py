@@ -30,7 +30,9 @@ from repro.core.sjpc import SJPCConfig
 from repro.distributed import wire
 
 CFG = SJPCConfig(d=5, s=3, ratio=0.5, width=64, depth=2, seed=7)
-KINDS = ("sjpc", "reservoir", "lsh_ss")
+# Registry-driven: every registered kind (plugin kinds included, once
+# their module is imported anywhere in the test session) must round-trip.
+KINDS = tuple(E.available())
 ESTS = {kind: E.make(kind, CFG) for kind in KINDS}
 
 
